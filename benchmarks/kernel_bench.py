@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: wall time of the jnp reference vs the Pallas
+kernel (interpret mode on CPU — the timing is indicative only; the real
+target is TPU Mosaic, see kernels/*.py docstrings)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)            # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 1 << (18 if quick else 22)
+    g = jax.random.normal(jax.random.key(0), (n,))
+    key = jax.random.key(1)
+
+    f_ref = jax.jit(lambda g: ops.dithered_quantize(g, 255.0, key,
+                                                    use_kernel=False))
+    f_ker = jax.jit(lambda g: ops.dithered_quantize(g, 255.0, key,
+                                                    use_kernel=True))
+    rows.append(("kernel/dithered_quant/ref", _time(f_ref, g), f"n={n}"))
+    rows.append(("kernel/dithered_quant/pallas-interp", _time(f_ker, g),
+                 f"n={n}"))
+
+    a = jnp.asarray(3.0)
+    ns = jnp.asarray(0.1)
+    f_ref = jax.jit(lambda g: ops.ota_combine(g, a, ns, key,
+                                              use_kernel=False))
+    f_ker = jax.jit(lambda g: ops.ota_combine(g, a, ns, key,
+                                              use_kernel=True))
+    rows.append(("kernel/ota_combine/ref", _time(f_ref, g), f"n={n}"))
+    rows.append(("kernel/ota_combine/pallas-interp", _time(f_ker, g),
+                 f"n={n}"))
+
+    B, S, D = 2, 512 if quick else 2048, 256
+    aa = jax.random.uniform(jax.random.key(2), (B, S, D), minval=.5,
+                            maxval=.99)
+    bb = jax.random.normal(jax.random.key(3), (B, S, D)) * .1
+    h0 = jnp.zeros((B, D))
+    f_ref = jax.jit(lambda a, b, h: ops.linear_scan(a, b, h,
+                                                    use_kernel=False))
+    f_ker = jax.jit(lambda a, b, h: ops.linear_scan(a, b, h,
+                                                    use_kernel=True))
+    rows.append(("kernel/linear_scan/ref", _time(f_ref, aa, bb, h0),
+                 f"B{B}xS{S}xD{D}"))
+    rows.append(("kernel/linear_scan/pallas-interp",
+                 _time(f_ker, aa, bb, h0), f"B{B}xS{S}xD{D}"))
+    return rows, {}

@@ -1,0 +1,127 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run.
+
+    compute term    = HLO_FLOPs / (chips_local * peak_FLOPs)   [s]
+    memory term     = HLO_bytes / HBM_bw                        [s]
+    collective term = collective_link_bytes / (links * link_bw) [s]
+
+All numbers come from launch/hlo_cost.py's trip-count-aware analysis of the
+compiled per-device HLO module (so they are already *per device*).
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per step for training
+(3 for fwd-only steps), D = tokens processed per device per step.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+SHAPE_TOKENS = {
+    # (global_batch, seq, fwd_bwd?)
+    "train_4k": (256, 4096, True),
+    "prefill_32k": (32, 32768, False),
+    "decode_32k": (128, 1, False),
+    "long_500k": (1, 1, False),
+}
+
+
+def model_flops(rec: dict) -> float:
+    batch, seq, fwd_bwd = SHAPE_TOKENS[rec["shape"]]
+    n_active = rec.get("active_param_count") or rec.get("param_count") or 0
+    # clamp seq at the arch's decoder context (whisper: 448) and add the
+    # encoder pass tokens for enc-dec archs
+    from repro.configs import get_config
+    cfg = get_config(rec["arch"])
+    eff_seq = seq if rec["shape"].startswith("decode") or \
+        rec["shape"] == "long_500k" else min(
+            seq, cfg.max_target_positions or seq)
+    tokens = batch * eff_seq
+    if cfg.encoder_positions and rec["shape"] != "decode_32k":
+        tokens += batch * cfg.encoder_positions
+    factor = 6.0 if fwd_bwd else 2.0
+    return factor * n_active * tokens
+
+
+def roofline_row(rec: dict) -> dict:
+    hc = rec.get("hlo_cost") or {}
+    n_dev = rec.get("n_devices", 256)
+    flops = hc.get("flops", 0.0)
+    hbm = hc.get("hbm_bytes", 0.0)
+    coll = hc.get("collective_bytes", 0.0)
+    compute_t = flops / PEAK_FLOPS
+    memory_t = hbm / HBM_BW
+    coll_t = coll / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mf_per_dev = mf / max(n_dev, 1)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": rec["status"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_per_dev,
+        "useful_flop_frac": (mf_per_dev / flops) if flops else None,
+        "hlo_flops": flops, "hbm_bytes": hbm, "collective_bytes": coll,
+    }
+
+
+def load_records(mesh: str = "pod", tag: str = ""):
+    recs = []
+    suffix = f"_{tag}.json" if tag else ".json"
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}{suffix}")):
+        r = json.loads(f.read_text())
+        if tag and r.get("tag") != tag:
+            continue
+        if not tag and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = True):
+    rows = []
+    table = []
+    for rec in load_records("pod"):
+        if rec["status"] == "skipped":
+            table.append({"arch": rec["arch"], "shape": rec["shape"],
+                          "mesh": rec["mesh"], "status": "skipped",
+                          "reason": rec.get("reason", "")})
+            continue
+        if rec["status"] != "ok":
+            table.append({"arch": rec["arch"], "shape": rec["shape"],
+                          "mesh": rec["mesh"], "status": "error"})
+            continue
+        row = roofline_row(rec)
+        table.append(row)
+        rows.append((f"roofline/{rec['arch']}/{rec['shape']}",
+                     row["compute_s"] * 1e6,
+                     f"dom={row['dominant']},coll_s={row['collective_s']:.3e}"))
+    out = {"hardware": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                        "ici_bw": ICI_BW}, "table": table}
+    from .common import save_result
+    save_result("roofline", out)
+    return rows, out
+
+
+def format_table(out: dict) -> str:
+    lines = [f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+             f" {'collect_s':>10s} {'dominant':>10s} {'useful%':>8s}"]
+    for r in out["table"]:
+        if r.get("status") != "ok" and "compute_s" not in r:
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                         f"[{r.get('status')}] {r.get('reason','')[:60]}")
+            continue
+        uf = r.get("useful_flop_frac")
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} "
+            f"{(uf * 100 if uf else 0):7.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows. Full payloads are saved to
+experiments/results/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds/trials (slow)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark module")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (fig2_ota_sc, fig2_digital_sc, fig3_nonconvex, roofline,
+                   kernel_bench, theorem_validation)
+    modules = {
+        "kernel_bench": kernel_bench,
+        "roofline": roofline,
+        "theorem_validation": theorem_validation,
+        "fig2_ota_sc": fig2_ota_sc,
+        "fig2_digital_sc": fig2_digital_sc,
+        "fig3_nonconvex": fig3_nonconvex,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        t0 = time.time()
+        try:
+            rows, payload = mod.run(quick=quick)
+        except Exception as e:
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            continue
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}", flush=True)
+        print(f"{name}/TOTAL,{(time.time() - t0) * 1e6:.0f},ok", flush=True)
+        if name == "roofline" and payload.get("table"):
+            print(roofline.format_table(payload), file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Theorem 1 validation: the bias-variance trade-off curve.
+
+Sweeps the design family between zero-bias (p=1/N) and min-noise (gamma =
+gamma_max) anchors, and for each point compares
+
+  * the Theorem-1 steady-state bound  2*N*kappa^2/mu^2 * sum(p-1/N)^2
+                                      + 2*eta/mu * zeta(gamma)
+  * the MEASURED steady-state optimality error E||w_t - w*||^2 (averaged
+    over the tail rounds of a long run, MC over fading/noise)
+
+The measured error must sit below the bound everywhere, and both should
+exhibit the interior minimum that motivates the paper's joint design.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core import ota, ota_design
+from repro.core.bounds import ObjectiveWeights, bias_sum, theorem1_bound
+from repro.fl.trainer import FLTrainer, solve_w_star
+from .common import make_sc_setup, estimate_kappa_sc, save_result
+
+
+def run(quick: bool = True, n_devices: int = 10):
+    t0 = time.time()
+    rounds = 120 if quick else 400
+    trials = 2 if quick else 4
+    tail = 3                      # eval points averaged for steady state
+    task, ds, dep, eta_max = make_sc_setup(
+        n_devices, samples_per_device=200 if quick else 1000,
+        n_train_per_class=400 if quick else 1200)
+    eta = 0.25 * eta_max
+    kappa = estimate_kappa_sc(task, ds)
+    w = ObjectiveWeights.strongly_convex(eta=eta, mu=task.mu,
+                                         kappa_sc=kappa, n=n_devices)
+    spec = ota_design.OTADesignSpec(
+        lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
+        e_s=dep.cfg.energy_per_symbol, n0=dep.cfg.noise_power, weights=w)
+    g_zb = ota_design.anchor_zero_bias(spec)      # p = 1/N
+    g_mn = ota_design.anchor_min_noise(spec)      # min noise variance
+    x_all = np.concatenate([d.x for d in ds.devices])
+    y_all = np.concatenate([d.y for d in ds.devices])
+    w_star = solve_w_star(task, x_all, y_all,
+                          iters=1500 if quick else 4000)
+    trainer = FLTrainer(task, ds, dep, eta=eta)
+
+    rows, curve = [], []
+    for lam in (0.0, 0.25, 0.5, 0.75, 1.0):
+        gammas = (1 - lam) * g_zb + lam * g_mn
+        params = ota_design.params_from_gamma(spec, gammas)
+        p = params.participation_levels(dep.lambdas)
+        zeta = ota.lemma1_variance(params, dep.lambdas)["total"]
+        bound = theorem1_bound(rounds, eta=eta, mu=task.mu, diam=0.0,
+                               kappa_sc=kappa, p=p, zeta=zeta)
+        log = trainer.run(B.ProposedOTA(params, label=f"lam={lam}"),
+                          rounds=rounds, trials=trials,
+                          eval_every=rounds // 6, seed=3, w_star=w_star)
+        measured = float(log.opt_error[:, -tail:].mean())
+        curve.append({"lam": lam, "bias_sum": bias_sum(p), "zeta": zeta,
+                      "bound_bias": bound["bias"],
+                      "bound_var": bound["variance"],
+                      "bound_total": bound["bias"] + bound["variance"],
+                      "measured_err": measured})
+        ok = measured <= bound["bias"] + bound["variance"] + 1e-6
+        rows.append((f"theorem1/lam={lam}", measured * 1e6,
+                     f"bound={bound['bias'] + bound['variance']:.1f};"
+                     f"holds={ok}"))
+    payload = {"eta": eta, "kappa_sc": kappa, "rounds": rounds,
+               "curve": curve, "elapsed_s": time.time() - t0}
+    save_result("theorem1_validation", payload)
+    return rows, payload

@@ -1,0 +1,55 @@
+"""Minimal npz checkpointing for param/optimizer pytrees.
+
+Trees are flattened with '/'-joined key paths; arrays are devicehost-
+transferred with jax.device_get. Restore rebuilds the exact tree structure
+from a template (abstract or concrete).
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(directory, step: int, params, extra=None):
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    payload = _flatten(params)
+    if extra is not None:
+        payload.update({f"__extra__/{k}": v for k, v in _flatten(extra).items()})
+    np.savez(d / f"ckpt_{step:08d}.npz", **payload)
+    return d / f"ckpt_{step:08d}.npz"
+
+
+def latest_step(directory) -> int:
+    d = Path(directory)
+    steps = [int(m.group(1)) for f in d.glob("ckpt_*.npz")
+             if (m := re.match(r"ckpt_(\d+)\.npz", f.name))]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    return max(steps)
+
+
+def restore_checkpoint(directory, step: int, template):
+    d = Path(directory)
+    data = np.load(d / f"ckpt_{step:08d}.npz")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,31 @@
+"""Core library: the paper's biased wireless-FL contribution.
+
+Public surface:
+  channel     — deployment geometry, path loss, Rayleigh fading
+  ota         — biased OTA aggregation (Sec. II-A) + Lemma 1
+  digital     — biased digital aggregation (Sec. II-B) + Lemma 2
+  quantize    — dithered stochastic uniform quantizer
+  bounds      — Theorem 1/2 convergence bounds
+  sca         — successive convex approximation driver
+  ota_design / digital_design — Sec. IV parameter design (SCA + direct)
+  baselines   — SOTA OTA/digital comparison schemes (Sec. V)
+  collectives — wireless_psum: the technique as a distributed collective
+"""
+from .channel import (WirelessConfig, Deployment, FadingProcess,
+                      make_deployment, participation_probability)
+from .ota import OTAParams, lemma1_variance, ota_round
+from .digital import DigitalParams, lemma2_variance, digital_round
+from .bounds import (ObjectiveWeights, bias_sum, design_objective,
+                     theorem1_bound, theorem2_bound)
+from .ota_design import OTADesignSpec, design_ota_sca, design_ota_direct
+from .digital_design import (DigitalDesignSpec, design_digital_sca,
+                             design_digital_direct)
+
+__all__ = [
+    "WirelessConfig", "Deployment", "FadingProcess", "make_deployment",
+    "participation_probability", "OTAParams", "lemma1_variance", "ota_round",
+    "DigitalParams", "lemma2_variance", "digital_round", "ObjectiveWeights",
+    "bias_sum", "design_objective", "theorem1_bound", "theorem2_bound",
+    "OTADesignSpec", "design_ota_sca", "design_ota_direct",
+    "DigitalDesignSpec", "design_digital_sca", "design_digital_direct",
+]

@@ -1,0 +1,503 @@
+"""SOTA wireless-FL baselines reproduced for Sec. V comparisons.
+
+All baselines implement the ``Aggregator`` protocol used by the FL
+simulation loop (``repro.fl.trainer``): given the per-device local gradients
+and the round's fading realization, produce the PS global-gradient estimate
+plus round metadata (latency, participants).
+
+OTA baselines (Sec. V-A-1):
+  * IdealFedAvg        — noiseless mean (upper bound).
+  * ProposedOTA        — our biased OTA update with offline-designed params.
+  * VanillaOTA   [13]  — zero-instantaneous-bias common pre-scaler, needs
+                         global instantaneous CSI (min-gain inversion).
+  * OPCOTAComp   [19]  — per-round MSE-optimal power control (global CSI).
+  * LCPCOTAComp  [19]  — common tunable pre-scaler, statistical CSI.
+  * OPCOTAFL     [20]  — genie-aided per-round threshold power control,
+                         no PS post-scaler (uncontrolled bias allowed).
+  * BBFLInterior [16]  — schedule devices within rho_in, trunc. inversion.
+  * BBFLAlternative[16]— alternate all-device / interior rounds.
+
+Digital baselines (Sec. V-A-2); every scheme transmits dithered-quantized
+gradients and is charged channel-capacity latency, as in the paper:
+  * ProposedDigital    — our biased digital update.
+  * BestChannel  [7]   — top-K instantaneous |h|, equal bits.
+  * BestChannelNorm[7] — top-K' by |h| then top-K by ||g||, bits ∝ norms.
+  * PropFairness [9]   — top-K by |h|^2/Lambda.
+  * UQOS         [32]  — optimized unbiased sampling, common fixed rate.
+  * QML          [11]  — min-latency bit allocation under variance cap.
+  * FedTOE       [10]  — equal-outage rates, variance-min bit allocation.
+
+Where a published scheme depends on machinery orthogonal to this paper
+(e.g. gradient sparsification in [7]), we follow the paper's own adapted
+setup (Sec. V): dithered quantization everywhere, no sparsification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .channel import Deployment
+from .digital import DigitalParams, digital_round
+from .ota import OTAParams, ota_round, uniform_gamma_min_variance
+from .quantize import payload_bits, quantize_np
+
+
+@dataclasses.dataclass
+class RoundResult:
+    ghat: np.ndarray
+    latency_s: float
+    participants: np.ndarray      # 0/1 per device
+    info: dict
+
+
+class Aggregator:
+    """Base: one uplink round. Subclasses set ``name`` and ``is_ota``."""
+
+    name: str = "base"
+    is_ota: bool = True
+
+    def round(self, grads: Sequence[np.ndarray], h: np.ndarray, t: int,
+              rng: np.random.Generator) -> RoundResult:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------- OTA
+
+class IdealFedAvg(Aggregator):
+    name = "Ideal FedAvg"
+
+    def round(self, grads, h, t, rng):
+        g = np.mean(np.stack([np.asarray(g) for g in grads]), axis=0)
+        return RoundResult(g, 0.0, np.ones(len(grads)), {})
+
+
+class ProposedOTA(Aggregator):
+    """Our scheme: offline-designed (gamma, alpha) biased OTA update."""
+
+    def __init__(self, params: OTAParams, label: str = "Proposed OTA-FL (SCA)"):
+        self.params = params
+        self.name = label
+
+    def round(self, grads, h, t, rng):
+        ghat, chi = ota_round(self.params, grads, h, rng)
+        d = self.params.dim
+        # concurrent analog upload: tau = d/B symbols (Sec. II-A), charged
+        # by the trainer via its bandwidth constant; latency here is in
+        # "channel uses" and converted by the caller
+        return RoundResult(ghat, float(d), chi, {})
+
+
+class VanillaOTA(Aggregator):
+    """[13]: all devices invert with a common pre-scaler set by the weakest
+    instantaneous channel (global CSI), zero instantaneous bias."""
+
+    name = "Vanilla OTA-FL"
+
+    def __init__(self, dim: int, g_max: float, e_s: float, n0: float):
+        self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
+
+    def round(self, grads, h, t, rng):
+        n = len(grads)
+        gamma_t = np.sqrt(self.dim * self.e_s) * float(np.min(np.abs(h))) / self.g_max
+        acc = gamma_t * np.sum(np.stack([np.asarray(g) for g in grads]), axis=0)
+        z = rng.normal(scale=np.sqrt(self.n0), size=self.dim)
+        ghat = (acc + z) / (n * gamma_t)
+        return RoundResult(ghat, float(self.dim), np.ones(n), {"gamma_t": gamma_t})
+
+
+class OPCOTAComp(Aggregator):
+    """[19] optimized power control for OTA computation: per-round MSE-optimal
+    (eta, {b_m}) with global instantaneous CSI. Devices below the inversion
+    threshold transmit at full power (uncontrolled shrinkage bias)."""
+
+    name = "OPC OTA-Comp"
+
+    def __init__(self, dim: int, g_max: float, e_s: float, n0: float,
+                 n_grid: int = 64):
+        self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
+        self.n_grid = n_grid
+
+    def _mse(self, eta: float, habs: np.ndarray) -> float:
+        n = habs.shape[0]
+        b_bar = np.sqrt(self.dim * self.e_s) / self.g_max
+        b = np.minimum(b_bar, np.sqrt(eta) / habs)
+        c = b * habs / np.sqrt(eta)          # contribution weight, <= 1
+        return (self.g_max ** 2 * np.sum((c - 1.0) ** 2) / n ** 2
+                + self.dim * self.n0 / (n ** 2 * eta))
+
+    def round(self, grads, h, t, rng):
+        habs = np.abs(h)
+        n = len(grads)
+        b_bar = np.sqrt(self.dim * self.e_s) / self.g_max
+        # candidate eta: structure of [19] — optimum is at one of the
+        # channel-inversion breakpoints or between; log-grid + refine
+        lo = (b_bar * np.min(habs)) ** 2 * 1e-4
+        hi = (b_bar * np.max(habs)) ** 2 * 1e4
+        etas = np.geomspace(max(lo, 1e-300), hi, self.n_grid)
+        mses = [self._mse(e, habs) for e in etas]
+        eta = float(etas[int(np.argmin(mses))])
+        b = np.minimum(b_bar, np.sqrt(eta) / habs)
+        acc = np.zeros(self.dim)
+        for m, g in enumerate(grads):
+            acc += b[m] * habs[m] * np.asarray(g)     # phase-aligned
+        z = rng.normal(scale=np.sqrt(self.n0), size=self.dim)
+        ghat = (acc + z) / (n * np.sqrt(eta))
+        return RoundResult(ghat, float(self.dim), np.ones(n), {"eta": eta})
+
+
+class LCPCOTAComp(Aggregator):
+    """[19] low-complexity power control: one common truncated-inversion
+    pre-scaler optimized offline from channel statistics."""
+
+    name = "LCPC OTA-Comp"
+
+    def __init__(self, deployment: Deployment, dim: int, g_max: float,
+                 e_s: float, n0: float):
+        gamma = uniform_gamma_min_variance(deployment.lambdas, dim, e_s,
+                                           g_max, n0)
+        gammas = np.full(deployment.n_devices, gamma)
+        a_m = gammas * np.exp(-(gammas ** 2) * g_max ** 2
+                              / (dim * deployment.lambdas * e_s))
+        self.params = OTAParams(gammas=gammas, alpha=float(np.sum(a_m)),
+                                g_max=g_max, dim=dim, energy_per_symbol=e_s,
+                                noise_psd=n0)
+
+    def round(self, grads, h, t, rng):
+        ghat, chi = ota_round(self.params, grads, h, rng)
+        return RoundResult(ghat, float(self.params.dim), chi, {})
+
+
+class OPCOTAFL(Aggregator):
+    """[20] (genie-aided) optimized OTA-FL power control: per-round common
+    inversion threshold chosen with full current-round CSI, no PS
+    post-scaler constraint (bias left uncontrolled)."""
+
+    name = "OPC OTA-FL (genie)"
+
+    def __init__(self, dim: int, g_max: float, e_s: float, n0: float):
+        self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
+
+    def round(self, grads, h, t, rng):
+        habs = np.abs(h)
+        n = len(grads)
+        order = np.argsort(habs)[::-1]
+        best = None
+        for k in range(1, n + 1):
+            theta = habs[order[k - 1]]
+            gamma = np.sqrt(self.dim * self.e_s) * theta / self.g_max
+            # include-k-strongest: bias proxy (1-k/n)^2 G^2 + noise
+            score = (self.g_max ** 2 * (1.0 - k / n) ** 2
+                     + self.dim * self.n0 / (k * gamma) ** 2)
+            if best is None or score < best[0]:
+                best = (score, k, gamma)
+        _, k, gamma = best
+        sel = order[:k]
+        chi = np.zeros(n)
+        chi[sel] = 1.0
+        acc = gamma * np.sum(np.stack([np.asarray(grads[m]) for m in sel]), axis=0)
+        z = rng.normal(scale=np.sqrt(self.n0), size=self.dim)
+        ghat = (acc + z) / (k * gamma)
+        return RoundResult(ghat, float(self.dim), chi, {"k": k})
+
+
+class BBFLInterior(Aggregator):
+    """[16] broadband analog aggregation, cell-interior scheduling: only
+    devices with distance <= rho_in participate, truncated inversion with a
+    statistically-tuned common pre-scaler; PS divides by (|S_t| * gamma)."""
+
+    name = "BB-FL Interior"
+
+    def __init__(self, deployment: Deployment, dim: int, g_max: float,
+                 e_s: float, n0: float, rho_in_frac: float = 0.7):
+        self.interior = deployment.distances_m <= rho_in_frac * deployment.cfg.rho_max_m
+        lam_in = deployment.lambdas[self.interior]
+        self.gamma = uniform_gamma_min_variance(lam_in, dim, e_s, g_max, n0)
+        self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
+
+    def round(self, grads, h, t, rng):
+        n = len(grads)
+        tau = self.g_max * self.gamma / np.sqrt(self.dim * self.e_s)
+        chi = (np.abs(h) >= tau) & self.interior
+        k = int(np.sum(chi))
+        acc = np.zeros(self.dim)
+        for m in range(n):
+            if chi[m]:
+                acc += self.gamma * np.asarray(grads[m])
+        z = rng.normal(scale=np.sqrt(self.n0), size=self.dim)
+        denom = max(k, 1) * self.gamma
+        ghat = (acc + z) / denom
+        return RoundResult(ghat, float(self.dim), chi.astype(float), {"k": k})
+
+
+class BBFLAlternative(Aggregator):
+    """[16] alternating scheduling: even rounds all devices, odd rounds the
+    interior policy — balances data exploited vs. aggregation noise."""
+
+    name = "BB-FL Alternative"
+
+    def __init__(self, deployment: Deployment, dim: int, g_max: float,
+                 e_s: float, n0: float, rho_in_frac: float = 0.7):
+        self.interior_agg = BBFLInterior(deployment, dim, g_max, e_s, n0,
+                                         rho_in_frac)
+        self.all_mask = np.ones(deployment.n_devices, dtype=bool)
+        self.gamma_all = uniform_gamma_min_variance(
+            deployment.lambdas, dim, e_s, g_max, n0)
+        self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
+
+    def round(self, grads, h, t, rng):
+        if t % 2 == 1:
+            return self.interior_agg.round(grads, h, t, rng)
+        n = len(grads)
+        tau = self.g_max * self.gamma_all / np.sqrt(self.dim * self.e_s)
+        chi = np.abs(h) >= tau
+        k = int(np.sum(chi))
+        acc = np.zeros(self.dim)
+        for m in range(n):
+            if chi[m]:
+                acc += self.gamma_all * np.asarray(grads[m])
+        z = rng.normal(scale=np.sqrt(self.n0), size=self.dim)
+        ghat = (acc + z) / (max(k, 1) * self.gamma_all)
+        return RoundResult(ghat, float(self.dim), chi.astype(float), {"k": k})
+
+
+# ----------------------------------------------------------------- digital
+
+def _capacity_rate(habs: np.ndarray, e_s: float, n0: float) -> np.ndarray:
+    """Instantaneous spectral efficiency log2(1 + E_s|h|^2/N0) [b/s/Hz]."""
+    return np.log2(1.0 + e_s * habs ** 2 / n0)
+
+
+class ProposedDigital(Aggregator):
+    is_ota = False
+
+    def __init__(self, params: DigitalParams,
+                 label: str = "Proposed Digital FL (SCA)"):
+        self.params = params
+        self.name = label
+
+    def round(self, grads, h, t, rng):
+        ghat, chi, latency = digital_round(self.params, grads, h, rng)
+        return RoundResult(ghat, latency, chi, {})
+
+
+class _DigitalBase(Aggregator):
+    is_ota = False
+
+    def __init__(self, deployment: Deployment, dim: int, g_max: float,
+                 e_s: float, n0: float, bandwidth_hz: float):
+        self.dep = deployment
+        self.dim, self.g_max = dim, g_max
+        self.e_s, self.n0, self.B = e_s, n0, bandwidth_hz
+
+    def _upload(self, grads, sel, bits, habs, rng):
+        """Quantize+send the selected set; returns (sum of g^q, latency)."""
+        rate = _capacity_rate(habs, self.e_s, self.n0)
+        acc = np.zeros(self.dim)
+        latency = 0.0
+        for m in sel:
+            r = int(bits[m]) if np.ndim(bits) else int(bits)
+            gq = quantize_np(np.asarray(grads[m], dtype=np.float64), r, rng)
+            acc += gq
+            latency += payload_bits(self.dim, r) / (self.B * max(rate[m], 1e-9))
+        return acc, latency
+
+
+class BestChannel(_DigitalBase):
+    """[7]: top-K devices by instantaneous channel gain, equal bits."""
+
+    def __init__(self, deployment, dim, g_max, e_s, n0, bandwidth_hz,
+                 k: int = 4, r_bits: int = 6):
+        super().__init__(deployment, dim, g_max, e_s, n0, bandwidth_hz)
+        self.k, self.r = k, r_bits
+        self.name = "Best Channel"
+
+    def round(self, grads, h, t, rng):
+        habs = np.abs(h)
+        sel = np.argsort(habs)[::-1][:self.k]
+        acc, latency = self._upload(grads, sel, self.r, habs, rng)
+        chi = np.zeros(len(grads))
+        chi[sel] = 1.0
+        return RoundResult(acc / self.k, latency, chi, {})
+
+
+class BestChannelNorm(_DigitalBase):
+    """[7]: top-K' by channel then top-K by gradient norm, bits ∝ norms."""
+
+    def __init__(self, deployment, dim, g_max, e_s, n0, bandwidth_hz,
+                 k: int = 4, k_prime: int = 6, r_total: int = 24):
+        super().__init__(deployment, dim, g_max, e_s, n0, bandwidth_hz)
+        self.k, self.kp, self.r_total = k, k_prime, r_total
+        self.name = "Best Channel-Norm"
+
+    def round(self, grads, h, t, rng):
+        habs = np.abs(h)
+        cand = np.argsort(habs)[::-1][:self.kp]
+        norms = np.array([np.linalg.norm(grads[m]) for m in cand])
+        sel = cand[np.argsort(norms)[::-1][:self.k]]
+        sel_norms = np.array([np.linalg.norm(grads[m]) for m in sel])
+        share = sel_norms / max(np.sum(sel_norms), 1e-12)
+        bits = np.zeros(len(grads), dtype=np.int64)
+        bits[sel] = np.maximum(1, np.round(self.r_total * share)).astype(np.int64)
+        acc, latency = self._upload(grads, sel, bits, habs, rng)
+        chi = np.zeros(len(grads))
+        chi[sel] = 1.0
+        return RoundResult(acc / self.k, latency, chi, {})
+
+
+class PropFairness(_DigitalBase):
+    """[9]: top-K by normalized fading |h|^2/Lambda (zero average bias)."""
+
+    def __init__(self, deployment, dim, g_max, e_s, n0, bandwidth_hz,
+                 k: int = 4, r_bits: int = 6):
+        super().__init__(deployment, dim, g_max, e_s, n0, bandwidth_hz)
+        self.k, self.r = k, r_bits
+        self.name = "Proportional Fairness"
+
+    def round(self, grads, h, t, rng):
+        score = np.abs(h) ** 2 / self.dep.lambdas
+        sel = np.argsort(score)[::-1][:self.k]
+        acc, latency = self._upload(grads, sel, self.r, np.abs(h), rng)
+        chi = np.zeros(len(grads))
+        chi[sel] = 1.0
+        return RoundResult(acc / self.k, latency, chi, {})
+
+
+class UQOS(_DigitalBase):
+    """[32]: unbiased quantized optimized scheduling. K devices sampled
+    without replacement with probs pi minimizing (1/N) sum 1/(p_out pi)
+    (=> pi ∝ 1/sqrt(p_succ), capped); common fixed rate R for all."""
+
+    def __init__(self, deployment, dim, g_max, e_s, n0, bandwidth_hz,
+                 k: int = 4, r_bits: int = 6, rate: float = 0.5):
+        super().__init__(deployment, dim, g_max, e_s, n0, bandwidth_hz)
+        self.k, self.r, self.rate = k, r_bits, rate
+        thr2 = (2.0 ** rate - 1.0) * n0 / e_s
+        self.p_succ = np.exp(-thr2 / deployment.lambdas)
+        pi = 1.0 / np.sqrt(np.maximum(self.p_succ, 1e-9))
+        # waterfill pi ∝ 1/sqrt(p_succ) with sum = K, pi <= 1
+        pi = pi * self.k / np.sum(pi)
+        for _ in range(50):
+            over = pi > 1.0
+            if not np.any(over):
+                break
+            deficit = self.k - np.sum(over)
+            pi[over] = 1.0
+            free = ~over
+            pi[free] = pi[free] * deficit / np.sum(pi[free])
+        self.pi = np.clip(pi, 1e-6, 1.0)
+        self.name = "UQOS"
+
+    def round(self, grads, h, t, rng):
+        n = len(grads)
+        # sample K without replacement with inclusion ∝ pi (systematic)
+        order = rng.permutation(n)
+        keys = rng.uniform(size=n) ** (1.0 / self.pi[order])
+        sel = order[np.argsort(keys)[::-1][:self.k]]
+        habs = np.abs(h)
+        snr_ok = _capacity_rate(habs, self.e_s, self.n0) >= self.rate
+        active = [m for m in sel if snr_ok[m]]
+        acc = np.zeros(self.dim)
+        latency = 0.0
+        for m in active:
+            gq = quantize_np(np.asarray(grads[m], dtype=np.float64), self.r, rng)
+            acc += gq / (n * self.pi[m] * self.p_succ[m])   # unbiased reweight
+            latency += payload_bits(self.dim, self.r) / (self.B * self.rate)
+        chi = np.zeros(n)
+        chi[active] = 1.0
+        return RoundResult(acc, latency, chi, {})
+
+
+class QML(_DigitalBase):
+    """[11]: quantized minimum-latency FL. K random devices; minimal common
+    bit-width meeting an average quantization-variance cap; capacity rates."""
+
+    def __init__(self, deployment, dim, g_max, e_s, n0, bandwidth_hz,
+                 k: int = 4, var_cap: float = 200.0, r_max: int = 16):
+        super().__init__(deployment, dim, g_max, e_s, n0, bandwidth_hz)
+        self.k, self.var_cap, self.r_max = k, var_cap, r_max
+        self.name = "QML"
+
+    def round(self, grads, h, t, rng):
+        n = len(grads)
+        sel = rng.choice(n, size=self.k, replace=False)
+        # smallest r with d*G^2/(2^r-1)^2 <= var_cap  (per-device cap)
+        r = 1
+        while (self.dim * self.g_max ** 2 / (2.0 ** r - 1.0) ** 2
+               > self.var_cap and r < self.r_max):
+            r += 1
+        acc, latency = self._upload(grads, sel, r, np.abs(h), rng)
+        chi = np.zeros(n)
+        chi[sel] = 1.0
+        return RoundResult(acc / self.k, latency, chi, {"r": r})
+
+
+class FedTOE(_DigitalBase):
+    """[10]: equal outage probability across devices; K random devices; bit
+    allocation greedily minimizing average quantization variance under the
+    round latency budget; unbiased success reweighting."""
+
+    def __init__(self, deployment, dim, g_max, e_s, n0, bandwidth_hz,
+                 k: int = 4, p_out: float = 0.1, t_budget_s: float = 0.22,
+                 r_max: int = 16):
+        super().__init__(deployment, dim, g_max, e_s, n0, bandwidth_hz)
+        self.k, self.p_out, self.t_budget, self.r_max = k, p_out, t_budget_s, r_max
+        # fixed per-device rates with common outage prob
+        thr2 = -deployment.lambdas * np.log1p(-p_out)
+        self.rates = np.log2(1.0 + e_s * thr2 / n0)
+        self.thr = np.sqrt(thr2)
+        self.name = "FedTOE"
+
+    def _alloc_bits(self, sel) -> dict:
+        """Greedy RB/bit allocation under the round budget. Devices whose
+        minimum (1-bit) payload does not fit are deferred this round —
+        transmitting anyway would blow the latency constraint (paper
+        enforces feasibility through its RB optimization)."""
+        order = sorted(sel, key=lambda m: -self.rates[m])
+        bits, used = {}, 0.0
+        for m in order:
+            t1 = payload_bits(self.dim, 1) / (self.B * max(self.rates[m], 1e-9))
+            if used + t1 <= self.t_budget:
+                bits[m] = 1
+                used += t1
+        def latency():
+            return sum(payload_bits(self.dim, bits[m])
+                       / (self.B * max(self.rates[m], 1e-9)) for m in bits)
+
+        while bits:
+            best_m, best_gain = None, 0.0
+            for m in bits:
+                if bits[m] >= self.r_max:
+                    continue
+                dv = (1.0 / (2.0 ** bits[m] - 1) ** 2
+                      - 1.0 / (2.0 ** (bits[m] + 1) - 1) ** 2)
+                cost = self.dim / (self.B * max(self.rates[m], 1e-9))
+                gain = dv / cost
+                if gain > best_gain:
+                    best_m, best_gain = m, gain
+            if best_m is None:
+                break
+            bits[best_m] += 1
+            if latency() > self.t_budget:
+                bits[best_m] -= 1
+                break
+        return bits
+
+    def round(self, grads, h, t, rng):
+        n = len(grads)
+        sel = rng.choice(n, size=self.k, replace=False)
+        bits = self._alloc_bits(sel)
+        habs = np.abs(h)
+        acc = np.zeros(self.dim)
+        latency = 0.0
+        chi = np.zeros(n)
+        k_sched = max(len(bits), 1)
+        for m in bits:
+            latency += payload_bits(self.dim, bits[m]) / (self.B * max(self.rates[m], 1e-9))
+            if habs[m] >= self.thr[m]:        # no outage
+                gq = quantize_np(np.asarray(grads[m], dtype=np.float64),
+                                 bits[m], rng)
+                acc += gq / (k_sched * (1.0 - self.p_out))
+                chi[m] = 1.0
+        return RoundResult(acc, latency, chi, {})

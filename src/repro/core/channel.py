@@ -1,0 +1,110 @@
+"""Wireless channel substrate: geometry, path loss, Rayleigh block fading.
+
+Implements the network model of Sec. V of the paper:
+
+- N devices deployed i.i.d. uniformly on a disk of radius ``rho_max`` with
+  the PS at the center (polar sampling: theta ~ U[0, 2pi), s = rho_max*sqrt(U)).
+- Log-distance path loss  PL(s) = PL0 + 10*Omega*log10(s/s0)  [dB], so the
+  average channel gain is  Lambda_m = 10^{-PL(s_m)/10}.
+- Rayleigh flat block fading: h_{m,t} ~ CN(0, Lambda_m), i.i.d. over rounds,
+  constant within a round.  |h|^2 ~ Exp(mean Lambda_m), hence the
+  participation probability of a threshold rule |h| >= tau is
+  P(|h| >= tau) = exp(-tau^2 / Lambda_m).
+
+Everything is deterministic given a seed; the PS only ever consumes the
+*statistical* CSI {Lambda_m} (paper Sec. II footnote 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    """Physical-layer constants (paper Sec. V defaults)."""
+
+    n_devices: int = 50
+    rho_max_m: float = 1750.0          # deployment disk radius [m]
+    pl0_db: float = 50.0               # reference path loss at s0 [dB]
+    pl_exponent: float = 2.2           # Omega
+    s0_m: float = 1.0                  # reference distance [m]
+    bandwidth_hz: float = 1.0e6        # B
+    carrier_hz: float = 2.4e9          # f_c (informational)
+    tx_power_dbm: float = 0.0          # P_tx -> E_s = P_tx / B  [J/symbol]
+    noise_psd_dbm_hz: float = -173.0   # N0
+    seed: int = 0
+
+    @property
+    def energy_per_symbol(self) -> float:
+        """E_s [Joule/symbol]: average transmit energy per (complex) symbol."""
+        p_tx_w = 10.0 ** (self.tx_power_dbm / 10.0) * 1e-3
+        return p_tx_w / self.bandwidth_hz
+
+    @property
+    def noise_power(self) -> float:
+        """N0 [W/Hz] spectral density in linear scale."""
+        return 10.0 ** (self.noise_psd_dbm_hz / 10.0) * 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class Deployment:
+    """A fixed device deployment: distances and average channel gains."""
+
+    distances_m: np.ndarray     # (N,)
+    lambdas: np.ndarray         # (N,) average channel gains Lambda_m
+    cfg: WirelessConfig
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.lambdas.shape[0])
+
+
+def path_loss_db(distance_m: np.ndarray, cfg: WirelessConfig) -> np.ndarray:
+    d = np.maximum(np.asarray(distance_m, dtype=np.float64), cfg.s0_m)
+    return cfg.pl0_db + 10.0 * cfg.pl_exponent * np.log10(d / cfg.s0_m)
+
+
+def make_deployment(cfg: WirelessConfig, seed: Optional[int] = None) -> Deployment:
+    """Sample a device deployment (fixed for the whole FL run, as in Sec. V)."""
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    u = rng.uniform(size=cfg.n_devices)
+    s = cfg.rho_max_m * np.sqrt(u)
+    # polar angle is sampled for completeness/reproducibility of the paper's
+    # geometry even though only the radius enters the path loss
+    _theta = rng.uniform(0.0, 2.0 * np.pi, size=cfg.n_devices)
+    lambdas = 10.0 ** (-path_loss_db(s, cfg) / 10.0)
+    return Deployment(distances_m=s, lambdas=lambdas, cfg=cfg)
+
+
+class FadingProcess:
+    """Rayleigh block-fading generator, i.i.d. across rounds.
+
+    ``sample(t)`` returns the complex h_{m,t} for round t, deterministic in
+    (seed, t) so that independent Monte-Carlo trials just use different
+    seeds and rounds never need to be stored.
+    """
+
+    def __init__(self, deployment: Deployment, seed: int = 0):
+        self._lambdas = deployment.lambdas
+        self._seed = seed
+
+    def sample(self, t: int) -> np.ndarray:
+        rng = np.random.default_rng(np.random.SeedSequence(entropy=(self._seed, int(t))))
+        n = self._lambdas.shape[0]
+        scale = np.sqrt(self._lambdas / 2.0)
+        re = rng.normal(size=n) * scale
+        im = rng.normal(size=n) * scale
+        return re + 1j * im
+
+    def gains(self, t: int) -> np.ndarray:
+        """|h_{m,t}| magnitudes for round t."""
+        return np.abs(self.sample(t))
+
+
+def participation_probability(threshold: np.ndarray, lambdas: np.ndarray) -> np.ndarray:
+    """P(|h_m| >= threshold_m) = exp(-threshold^2/Lambda) under Rayleigh fading."""
+    thr = np.asarray(threshold, dtype=np.float64)
+    return np.exp(-(thr ** 2) / np.asarray(lambdas, dtype=np.float64))

@@ -1,0 +1,104 @@
+"""Biased digital (TDMA + quantized) FL aggregation — Sec. II-B of the paper.
+
+Uplink model (eq. (9)-(12)):
+    chi^D_{m,t} = 1{ |h_{m,t}| >= rho_m }              (eq. (9))
+    device m transmits its dithered-quantized gradient (r_m bits/entry,
+    payload L_m = 64 + d r_m) at fixed spectral efficiency
+        R_m = log2(1 + E_s rho_m^2 / N0)   [bits/s/Hz]
+    (outage-free by the threshold rule); uplink latency L_m/(B R_m).
+    ghat_t = sum_m chi^D_{m,t} g^q_{m,t} / nu_m        (eq. (10))
+
+Statistics:
+    beta_m = E[chi^D] = exp(-rho_m^2/Lambda_m),  p_m = beta_m / nu_m
+    Lemma 2: var(ghat|w) <= zeta_D
+           = sum p^2 G^2 (1/beta - 1)                    [transmission]
+           + sum p^2 sigma^2                             [mini-batch]
+           + sum p^2 G^2 d / (beta (2^r - 1)^2)          [quantization]
+    Expected per-round latency (12): sum_m beta_m L_m / (B R_m).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .quantize import payload_bits, quantize_np
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitalParams:
+    """Offline-designed digital-FL parameters (time-invariant)."""
+
+    rhos: np.ndarray            # (N,) participation thresholds rho_m
+    nus: np.ndarray             # (N,) PS post-scalers nu_m
+    r_bits: np.ndarray          # (N,) quantization bits r_m (ints >= 1)
+    g_max: float
+    dim: int
+    energy_per_symbol: float
+    noise_psd: float
+    bandwidth_hz: float
+
+    def betas(self, lambdas: np.ndarray) -> np.ndarray:
+        """beta_m = exp(-rho_m^2 / Lambda_m)."""
+        return np.exp(-(self.rhos ** 2) / np.asarray(lambdas))
+
+    def participation_levels(self, lambdas: np.ndarray) -> np.ndarray:
+        """p_m = beta_m / nu_m."""
+        return self.betas(lambdas) / self.nus
+
+    def rates(self) -> np.ndarray:
+        """R_m = log2(1 + E_s rho_m^2/N0) [bits/s/Hz] (eq. (17c))."""
+        snr = self.energy_per_symbol * self.rhos ** 2 / self.noise_psd
+        return np.log2(1.0 + snr)
+
+    def payloads(self) -> np.ndarray:
+        return np.array([payload_bits(self.dim, int(r)) for r in self.r_bits],
+                        dtype=np.float64)
+
+    def expected_latency(self, lambdas: np.ndarray) -> float:
+        """Expected per-round uplink latency (eq. (12)) [s]."""
+        rates = np.maximum(self.rates(), 1e-12)
+        return float(np.sum(self.betas(lambdas) * self.payloads()
+                            / (self.bandwidth_hz * rates)))
+
+
+def lemma2_variance(params: DigitalParams, lambdas: np.ndarray,
+                    sigma_sq: Optional[np.ndarray] = None) -> dict:
+    """Lemma 2 variance bound, decomposed into its three terms."""
+    beta = params.betas(lambdas)
+    p = beta / params.nus
+    g2 = params.g_max ** 2
+    transmission = float(np.sum(p ** 2 * g2 * (1.0 / beta - 1.0)))
+    minibatch = 0.0 if sigma_sq is None else float(np.sum(p ** 2 * np.asarray(sigma_sq)))
+    s = (2.0 ** params.r_bits.astype(np.float64) - 1.0) ** 2
+    quant = float(np.sum(p ** 2 * g2 * params.dim / (beta * s)))
+    return {
+        "transmission": transmission,
+        "minibatch": minibatch,
+        "quantization": quant,
+        "total": transmission + minibatch + quant,
+    }
+
+
+def digital_round(params: DigitalParams, grads: Sequence[np.ndarray],
+                  h: np.ndarray, rng: np.random.Generator
+                  ) -> tuple[np.ndarray, np.ndarray, float]:
+    """One digital-FL uplink round (simulation path).
+
+    Returns (ghat, chi, latency_s): PS estimate (eq. (10)), participation
+    indicators, and the realized round latency (sum over participating
+    devices of L_m/(B R_m), TDMA).
+    """
+    d = params.dim
+    chi = (np.abs(h) >= params.rhos).astype(np.float64)
+    acc = np.zeros(d, dtype=np.float64)
+    rates = np.maximum(params.rates(), 1e-12)
+    payloads = params.payloads()
+    latency = 0.0
+    for m, g in enumerate(grads):
+        if chi[m]:
+            gq = quantize_np(np.asarray(g, dtype=np.float64), int(params.r_bits[m]), rng)
+            acc += gq / params.nus[m]
+            latency += payloads[m] / (params.bandwidth_hz * rates[m])
+    return acc, chi, float(latency)

@@ -1,0 +1,38 @@
+"""Per-device dataset handles and mini-batch sampling."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeviceDataset:
+    x: np.ndarray
+    y: np.ndarray
+
+    def __len__(self):
+        return self.x.shape[0]
+
+    def batch(self, batch_size: Optional[int], rng: np.random.Generator):
+        """Full-batch when batch_size is None (paper Sec. V: |B|=|D|)."""
+        if batch_size is None or batch_size >= len(self):
+            return self.x, self.y
+        idx = rng.choice(len(self), size=batch_size, replace=False)
+        return self.x[idx], self.y[idx]
+
+
+@dataclasses.dataclass
+class FLDataset:
+    devices: list          # list[DeviceDataset]
+    x_test: np.ndarray
+    y_test: np.ndarray
+
+    @property
+    def n_devices(self):
+        return len(self.devices)
+
+    @classmethod
+    def from_shards(cls, shards, x_test, y_test):
+        return cls([DeviceDataset(x, y) for x, y in shards], x_test, y_test)

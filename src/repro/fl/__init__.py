@@ -1,0 +1,4 @@
+from .tasks import SoftmaxRegressionTask, MLPTask
+from .trainer import FLTrainer, TrainLog
+
+__all__ = ["SoftmaxRegressionTask", "MLPTask", "FLTrainer", "TrainLog"]

@@ -1,0 +1,166 @@
+"""Learning tasks for the FL simulation experiments (Sec. V).
+
+Every task exposes a *flat-vector* parameter interface (the aggregators in
+``core.baselines`` operate on d-dimensional numpy gradients, mirroring the
+paper's w in R^d):
+
+  init_params() -> np.ndarray (d,)
+  device_grads(w, xs, ys)  -> (losses (N,), grads (N, d))   [vmapped, jit]
+  global_loss(w, x, y)     -> float   (the global objective F(w))
+  accuracy(w, x, y)        -> float
+
+Tasks:
+  * SoftmaxRegressionTask — l2-regularized softmax regression; mu-strongly
+    convex, L = 2 + mu smooth (paper Sec. V-A, [17]). d = C*(features+1).
+  * MLPTask — one-hidden-layer MLP with l2 regularization (the smooth
+    non-convex task standing in for ResNet-18 at CPU scale; Sec. V-B).
+
+Assumption 1 (||g|| <= G_max) is enforced the standard way, by clipping the
+per-device stochastic gradient to norm G_max (cf. [34] in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _clip_to(g: jnp.ndarray, g_max: float) -> jnp.ndarray:
+    nrm = jnp.linalg.norm(g)
+    return g * jnp.minimum(1.0, g_max / jnp.maximum(nrm, 1e-12))
+
+
+class SoftmaxRegressionTask:
+    """phi(w,(x,l)) = mu/2 ||w||^2 - log softmax_l(x^T W); strongly convex."""
+
+    def __init__(self, n_features: int, n_classes: int = 10, mu: float = 0.01,
+                 g_max: float = 20.0):
+        self.n_features = n_features
+        self.n_classes = n_classes
+        self.mu = mu
+        self.smooth_l = 2.0 + mu
+        self.g_max = g_max
+        self.dim = n_classes * (n_features + 1)
+
+        def loss(w_flat, x, y):
+            W = w_flat.reshape(n_classes, n_features + 1)
+            logits = x @ W[:, :-1].T + W[:, -1]
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+            return nll + 0.5 * mu * jnp.sum(w_flat ** 2)
+
+        self._loss = jax.jit(loss)
+        grad1 = jax.grad(loss)
+
+        def device_grad(w_flat, x, y):
+            return _clip_to(grad1(w_flat, x, y), g_max)
+
+        self._device_grads = jax.jit(jax.vmap(device_grad, in_axes=(None, 0, 0)))
+        self._device_losses = jax.jit(jax.vmap(loss, in_axes=(None, 0, 0)))
+
+        def acc(w_flat, x, y):
+            W = w_flat.reshape(n_classes, n_features + 1)
+            logits = x @ W[:, :-1].T + W[:, -1]
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._acc = jax.jit(acc)
+
+    def init_params(self, seed: int = 0) -> np.ndarray:
+        return np.zeros(self.dim, dtype=np.float64)
+
+    def device_grads(self, w, xs, ys):
+        """xs: (N, n, feat), ys: (N, n) stacked device batches."""
+        g = self._device_grads(jnp.asarray(w, jnp.float32),
+                               jnp.asarray(xs), jnp.asarray(ys))
+        return np.asarray(g, dtype=np.float64)
+
+    def device_losses(self, w, xs, ys):
+        return np.asarray(self._device_losses(jnp.asarray(w, jnp.float32),
+                                              jnp.asarray(xs), jnp.asarray(ys)))
+
+    def global_loss(self, w, x, y) -> float:
+        return float(self._loss(jnp.asarray(w, jnp.float32),
+                                jnp.asarray(x), jnp.asarray(y)))
+
+    def accuracy(self, w, x, y) -> float:
+        return float(self._acc(jnp.asarray(w, jnp.float32),
+                               jnp.asarray(x), jnp.asarray(y)))
+
+    def grad_norm_at_zero(self, xs, ys) -> np.ndarray:
+        """||grad f_m(0)|| per device — for the projection radius D."""
+        g = self.device_grads(np.zeros(self.dim), xs, ys)
+        return np.linalg.norm(g, axis=1)
+
+
+class MLPTask:
+    """One-hidden-layer MLP + l2 reg: smooth non-convex task (Sec. V-B)."""
+
+    def __init__(self, n_features: int, hidden: int = 64, n_classes: int = 10,
+                 mu_nc: float = 0.01, g_max: float = 49.0, seed: int = 0):
+        self.n_features, self.hidden, self.n_classes = n_features, hidden, n_classes
+        self.mu_nc, self.g_max = mu_nc, g_max
+        self.dim = (n_features * hidden + hidden) + (hidden * n_classes + n_classes)
+        self._seed = seed
+
+        def unpack(w):
+            i = 0
+            W1 = w[i:i + n_features * hidden].reshape(n_features, hidden)
+            i += n_features * hidden
+            b1 = w[i:i + hidden]; i += hidden
+            W2 = w[i:i + hidden * n_classes].reshape(hidden, n_classes)
+            i += hidden * n_classes
+            b2 = w[i:i + n_classes]
+            return W1, b1, W2, b2
+
+        def loss(w_flat, x, y):
+            W1, b1, W2, b2 = unpack(w_flat)
+            hdn = jax.nn.relu(x @ W1 + b1)
+            logits = hdn @ W2 + b2
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+            return nll + 0.5 * mu_nc * jnp.sum(w_flat ** 2)
+
+        self._loss = jax.jit(loss)
+        grad1 = jax.grad(loss)
+
+        def device_grad(w_flat, x, y):
+            return _clip_to(grad1(w_flat, x, y), g_max)
+
+        self._device_grads = jax.jit(jax.vmap(device_grad, in_axes=(None, 0, 0)))
+
+        def acc(w_flat, x, y):
+            W1, b1, W2, b2 = unpack(w_flat)
+            logits = jax.nn.relu(x @ W1 + b1) @ W2 + b2
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._acc = jax.jit(acc)
+        self._unpack = unpack
+
+    def init_params(self, seed: Optional[int] = None) -> np.ndarray:
+        rng = np.random.default_rng(self._seed if seed is None else seed)
+        w = np.zeros(self.dim)
+        w1 = rng.normal(scale=np.sqrt(2.0 / self.n_features),
+                        size=self.n_features * self.hidden)
+        w2 = rng.normal(scale=np.sqrt(2.0 / self.hidden),
+                        size=self.hidden * self.n_classes)
+        w[:w1.shape[0]] = w1
+        w[self.n_features * self.hidden + self.hidden:
+          self.n_features * self.hidden + self.hidden + w2.shape[0]] = w2
+        return w
+
+    def device_grads(self, w, xs, ys):
+        g = self._device_grads(jnp.asarray(w, jnp.float32),
+                               jnp.asarray(xs), jnp.asarray(ys))
+        return np.asarray(g, dtype=np.float64)
+
+    def global_loss(self, w, x, y) -> float:
+        return float(self._loss(jnp.asarray(w, jnp.float32),
+                                jnp.asarray(x), jnp.asarray(y)))
+
+    def accuracy(self, w, x, y) -> float:
+        return float(self._acc(jnp.asarray(w, jnp.float32),
+                               jnp.asarray(x), jnp.asarray(y)))

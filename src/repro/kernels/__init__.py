@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (+ pure-jnp oracles) for the framework's hot spots:
+
+  dithered_quant — digital-FL gradient payload quantizer
+  ota_combine    — fused OTA post-scale + noise epilogue
+  linear_scan    — SSM/RG-LRU recurrence (chunked, VMEM carry)
+"""
+from . import ops, ref

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: dithered stochastic uniform quantize-dequantize.
+
+The digital-FL payload compressor (paper Sec. II-B). At LM scale the
+gradient has 10^7–10^12 entries; quantization is a pure elementwise
+streaming op, so the kernel is memory-bound — the win over the naive
+composition is fusing (normalize, floor, compare, clip, affine) into one
+HBM->VMEM pass instead of five intermediate arrays.
+
+Layout: the caller flattens/pads the tensor to (R, 128) with R a multiple
+of the block row count; grid walks row-blocks; the scalar pair
+(m = ||g||_inf, levels = 2^r - 1) rides in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+LANES = 128
+
+
+def _kernel(scal_ref, g_ref, u_ref, o_ref):
+    m = scal_ref[0, 0]
+    levels = scal_ref[0, 1]
+    g = g_ref[...]
+    u = u_ref[...]
+    delta = 2.0 * m / levels
+    safe = jnp.where(delta > 0, delta, 1.0)
+    x = (g + m) / safe
+    lo = jnp.floor(x)
+    up = (u < (x - lo)).astype(g.dtype)
+    q = jnp.clip(lo + up, 0.0, levels)
+    out = -m + safe * q
+    o_ref[...] = jnp.where(delta > 0, out, jnp.zeros_like(g))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dithered_quantize_2d(g2d: jnp.ndarray, u2d: jnp.ndarray,
+                         m: jnp.ndarray, levels: jnp.ndarray,
+                         interpret: bool = False) -> jnp.ndarray:
+    """g2d/u2d: (R, 128) with R % BLOCK_ROWS == 0; m/levels scalars."""
+    R = g2d.shape[0]
+    scal = jnp.stack([m.astype(g2d.dtype),
+                      levels.astype(g2d.dtype)]).reshape(1, 2)
+    grid = (R // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),          # scalars
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(g2d.shape, g2d.dtype),
+        interpret=interpret,
+    )(scal, g2d, u2d)

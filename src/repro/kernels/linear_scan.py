@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: chunked first-order linear scan h_t = a_t h_{t-1} + b_t.
+
+The recurrent hot-spot of the SSM/hybrid architectures (Mamba selective
+scan, RG-LRU). GPU implementations (the Mamba CUDA kernel) fuse the scan
+into registers per thread; the TPU-native shape is different (DESIGN.md §2):
+
+  * grid = (feature_blocks, seq_chunks) with the SEQUENCE dimension as the
+    fastest (sequential) grid axis — Pallas guarantees sequential execution
+    order, so the carry lives in a VMEM scratch buffer across chunk steps;
+  * inside a chunk, a Hillis–Steele log-depth scan over the (chunk, 128)
+    block keeps everything in VREG-friendly (8,128) tiles instead of a
+    length-`chunk` scalar loop.
+
+Operands are pre-reshaped by the wrapper to (B*D/128 merged feature rows):
+  a, b : (F, S, 128)   (F feature-blocks, S sequence, 128 lanes)
+  h0   : (F, 1, 128)
+Outputs: h_all (F, S, 128), h_last (F, 1, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 256
+LANES = 128
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, hlast_ref, carry):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _():
+        carry[...] = h0_ref[0]
+
+    a = a_ref[0].astype(jnp.float32)      # (CHUNK, 128)
+    b = b_ref[0].astype(jnp.float32)
+    # Hillis-Steele inclusive scan of the affine maps (a, b):
+    # compose (a2,b2)∘(a1,b1) = (a1*a2, b1*a2 + b2)   [h -> a2(a1 h+b1)+b2]
+    off = 1
+    while off < CHUNK:
+        a_prev = jnp.pad(a, ((off, 0), (0, 0)), constant_values=1.0)[:CHUNK]
+        b_prev = jnp.pad(b, ((off, 0), (0, 0)))[:CHUNK]
+        b = b_prev * a + b
+        a = a_prev * a
+        off *= 2
+    h0 = carry[...]                        # (1, 128)
+    h_all = a * h0 + b
+    o_ref[0] = h_all.astype(o_ref.dtype)
+    carry[...] = h_all[-1:]
+
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(s == n_chunks - 1)
+    def _():
+        hlast_ref[0] = carry[...].astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def linear_scan_fsl(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                    interpret: bool = False):
+    """a,b: (F,S,128) with S % CHUNK == 0; h0: (F,1,128)."""
+    F, S, _ = a.shape
+    grid = (F, S // CHUNK)
+    out_shape = [jax.ShapeDtypeStruct(a.shape, a.dtype),
+                 jax.ShapeDtypeStruct((F, 1, LANES), a.dtype)]
+    h_all, h_last = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CHUNK, LANES), lambda f, s: (f, s, 0)),
+            pl.BlockSpec((1, CHUNK, LANES), lambda f, s: (f, s, 0)),
+            pl.BlockSpec((1, 1, LANES), lambda f, s: (f, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, CHUNK, LANES), lambda f, s: (f, s, 0)),
+            pl.BlockSpec((1, 1, LANES), lambda f, s: (f, 0, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return h_all, h_last

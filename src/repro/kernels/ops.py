@@ -1,0 +1,115 @@
+"""jit'd wrappers around the Pallas kernels (padding, reshapes, fallbacks).
+
+``use_kernel=False`` routes to the pure-jnp oracle (kernels/ref.py); on CPU
+the kernels execute in Pallas interpret mode, on TPU they compile to
+Mosaic. All wrappers accept arbitrary-shaped operands.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dithered_quant import dithered_quantize_2d, BLOCK_ROWS, LANES
+from .ota_combine import ota_combine_2d
+from .linear_scan import linear_scan_fsl, CHUNK
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _to_blocks(x: jnp.ndarray):
+    """Flatten + zero-pad to (R, LANES) with R % BLOCK_ROWS == 0."""
+    n = x.size
+    per = BLOCK_ROWS * LANES
+    n_pad = (-n) % per
+    flat = jnp.pad(x.reshape(-1), (0, n_pad))
+    return flat.reshape(-1, LANES), n
+
+
+def _from_blocks(y2d: jnp.ndarray, n: int, shape, dtype):
+    return y2d.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def dithered_quantize(g: jnp.ndarray, levels: jnp.ndarray, key: jax.Array,
+                      *, use_kernel: bool = True) -> jnp.ndarray:
+    """Dithered stochastic uniform quantize-dequantize of a full tensor."""
+    m = jnp.max(jnp.abs(g)).astype(g.dtype)
+    dither = jax.random.uniform(key, g.shape, dtype=jnp.float32).astype(g.dtype)
+    levels = jnp.asarray(levels, g.dtype)
+    if not use_kernel:
+        return ref.dithered_quantize_ref(g, m, levels, dither)
+    g2d, n = _to_blocks(g)
+    u2d, _ = _to_blocks(dither)
+    out = dithered_quantize_2d(g2d, u2d, m, levels, interpret=_on_cpu())
+    return _from_blocks(out, n, g.shape, g.dtype)
+
+
+def ota_combine(g: jnp.ndarray, alpha: jnp.ndarray, noise_scale: jnp.ndarray,
+                key: jax.Array, *, use_kernel: bool = True) -> jnp.ndarray:
+    """ghat = g/alpha + noise_scale * N(0,1) (noise_scale already /alpha)."""
+    inv_alpha = (1.0 / alpha).astype(g.dtype)
+    z = (noise_scale.astype(jnp.float32)
+         * jax.random.normal(key, g.shape, jnp.float32)).astype(g.dtype)
+    if not use_kernel:
+        return ref.ota_combine_ref(g, inv_alpha, z)
+    g2d, n = _to_blocks(g)
+    z2d, _ = _to_blocks(z)
+    out = ota_combine_2d(g2d, z2d, inv_alpha, interpret=_on_cpu())
+    return _from_blocks(out, n, g.shape, g.dtype)
+
+
+def selective_scan(dt, x, bm, cm, a_w, h0, *, use_kernel: bool = True):
+    """Fused Mamba-1 selective scan. dt/x: (B,S,D); bm/cm: (B,S,n);
+    a_w: (D,n); h0: (B,D,n). Returns (y (B,S,D), h_last (B,D,n))."""
+    if not use_kernel:
+        return ref.selective_scan_ref(dt, x, bm, cm, a_w, h0)
+    from .selective_scan import selective_scan_bfsn, CHUNK as SCHUNK
+    B, S, D = dt.shape
+    n = bm.shape[-1]
+    s_pad = (-S) % SCHUNK
+    d_pad = (-D) % LANES
+    dt_p = jnp.pad(dt, ((0, 0), (0, s_pad), (0, d_pad)))
+    x_p = jnp.pad(x, ((0, 0), (0, s_pad), (0, d_pad)))
+    bm_p = jnp.pad(bm, ((0, 0), (0, s_pad), (0, 0)))
+    cm_p = jnp.pad(cm, ((0, 0), (0, s_pad), (0, 0)))
+    a_p = jnp.pad(a_w, ((0, d_pad), (0, 0)))
+    h0_p = jnp.pad(h0, ((0, 0), (0, d_pad), (0, 0)))
+    Sp, Dp = S + s_pad, D + d_pad
+    F = Dp // LANES
+    to_bfs = lambda t: t.reshape(B, Sp, F, LANES).transpose(0, 2, 1, 3)
+    a_f = a_p.reshape(F, LANES, n)
+    h0_f = h0_p.reshape(B, F, LANES, n).transpose(0, 1, 3, 2)
+    y, h_last = selective_scan_bfsn(to_bfs(dt_p), to_bfs(x_p), bm_p, cm_p,
+                                    a_f, h0_f, interpret=_on_cpu())
+    y = y.transpose(0, 2, 1, 3).reshape(B, Sp, Dp)[:, :S, :D]
+    h_last = h_last.transpose(0, 1, 3, 2).reshape(B, Dp, n)[:, :D]
+    return y, h_last
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                *, use_kernel: bool = True):
+    """h_t = a_t h_{t-1} + b_t over axis 1. a,b: (B,S,D); h0: (B,D).
+
+    Returns (h_all, h_last). Kernel path pads S to a CHUNK multiple and
+    D to a LANES multiple (pad a=1, b=0 so padding is inert).
+    """
+    if not use_kernel:
+        return ref.linear_scan_ref(a, b, h0)
+    B, S, D = a.shape
+    s_pad = (-S) % CHUNK
+    d_pad = (-D) % LANES
+    a_p = jnp.pad(a, ((0, 0), (0, s_pad), (0, d_pad)), constant_values=1.0)
+    b_p = jnp.pad(b, ((0, 0), (0, s_pad), (0, d_pad)))
+    h0_p = jnp.pad(h0, ((0, 0), (0, d_pad)))
+    Sp, Dp = S + s_pad, D + d_pad
+    # (B, Sp, Dp) -> (B*Dp/LANES, Sp, LANES): feature-major blocks
+    a_f = a_p.transpose(0, 2, 1).reshape(B * Dp // LANES, LANES, Sp)
+    a_f = a_f.transpose(0, 2, 1)
+    b_f = b_p.transpose(0, 2, 1).reshape(B * Dp // LANES, LANES, Sp)
+    b_f = b_f.transpose(0, 2, 1)
+    h0_f = h0_p.reshape(B * Dp // LANES, 1, LANES)
+    h_all, h_last = linear_scan_fsl(a_f, b_f, h0_f, interpret=_on_cpu())
+    h_all = h_all.transpose(0, 2, 1).reshape(B, Dp, Sp).transpose(0, 2, 1)
+    return h_all[:, :S, :D], h_last.reshape(B, Dp)[:, :D]

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused OTA post-scale + AWGN injection (eq. (6)).
+
+After the ICI all-reduce produces sum_m chi_m gamma_m g_m, the PS epilogue
+is ghat = sum/alpha + z/alpha. Fusing the scale and the noise add keeps the
+reduced gradient in one HBM->VMEM pass (memory-bound epilogue); the noise
+tile is an explicit operand (see kernels/ref.py for why).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+LANES = 128
+
+
+def _kernel(scal_ref, g_ref, z_ref, o_ref):
+    inv_alpha = scal_ref[0, 0]
+    o_ref[...] = g_ref[...] * inv_alpha + z_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ota_combine_2d(g2d: jnp.ndarray, z2d: jnp.ndarray,
+                   inv_alpha: jnp.ndarray,
+                   interpret: bool = False) -> jnp.ndarray:
+    """g2d/z2d: (R,128), R % BLOCK_ROWS == 0; z pre-scaled noise."""
+    R = g2d.shape[0]
+    scal = inv_alpha.astype(g2d.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=(R // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(g2d.shape, g2d.dtype),
+        interpret=interpret,
+    )(scal, g2d, z2d)

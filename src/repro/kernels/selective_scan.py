@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused Mamba-1 selective scan.
+
+The §Perf analysis (EXPERIMENTS.md, falcon-mamba train_4k) showed the
+memory roofline term of the jnp selective scan is dominated by the
+(B, chunk, d_inner, n_state) transition transients that spill to HBM —
+XLA's loop fusion cannot keep them resident because the chunk working set
+(~1 GB) exceeds VMEM. The kernel restructures the computation so HBM
+traffic is exactly inputs + outputs:
+
+    reads : dt (S,128), x (S,128), B (S,n), C (S,n), A (128,n)
+    writes: y (S,128), h_last (n,128)
+
+i.e. per (batch, feature-block) grid cell nothing sized (chunk, 128, n)
+ever leaves VMEM. The state dimension n (16 for falcon-mamba) is a static
+python loop; each n-slice runs a Hillis-Steele log-depth scan on the
+(CHUNK, 128) tile with the carry h (n,128) in VMEM scratch across
+sequence chunks (sequential grid axis).
+
+Layouts (wrapper in ops.py):
+    dt, x : (B, F, S, 128)  F = d_inner/128 feature blocks
+    Bm,Cm : (B, S, n)
+    A     : (F, 128, n)
+    h0    : (B, F, n, 128)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+LANES = 128
+
+
+def _kernel(n_state: int, dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
+            y_ref, hlast_ref, h_scratch):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _():
+        h_scratch[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (CHUNK, 128)
+    x = x_ref[0, 0].astype(jnp.float32)            # (CHUNK, 128)
+    bm = b_ref[0].astype(jnp.float32)              # (CHUNK, n)
+    cm = c_ref[0].astype(jnp.float32)              # (CHUNK, n)
+    a_w = a_ref[0].astype(jnp.float32)             # (128, n)
+    h = h_scratch[...]                             # (n, 128)
+    y = jnp.zeros_like(dt)
+    h_new = []
+    for j in range(n_state):                       # static state loop
+        a = jnp.exp(dt * a_w[:, j][None, :])       # (CHUNK, 128)
+        b = dt * x * bm[:, j][:, None]
+        off = 1
+        while off < CHUNK:                         # Hillis-Steele scan
+            a_prev = jnp.pad(a, ((off, 0), (0, 0)),
+                             constant_values=1.0)[:CHUNK]
+            b_prev = jnp.pad(b, ((off, 0), (0, 0)))[:CHUNK]
+            b = b_prev * a + b
+            a = a_prev * a
+            off *= 2
+        h_j = a * h[j][None, :] + b                # (CHUNK, 128)
+        y = y + h_j * cm[:, j][:, None]
+        h_new.append(h_j[-1])
+    h_scratch[...] = jnp.stack(h_new, axis=0)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _():
+        hlast_ref[0, 0] = h_scratch[...].astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selective_scan_bfsn(dt, x, bm, cm, a_w, h0, interpret: bool = False):
+    """dt/x: (B,F,S,128); bm/cm: (B,S,n); a_w: (F,128,n); h0: (B,F,n,128).
+
+    Returns (y (B,F,S,128), h_last (B,F,n,128)). S % CHUNK == 0.
+    """
+    B, F, S, _ = dt.shape
+    n = bm.shape[-1]
+    grid = (B, F, S // CHUNK)
+    out_shape = [jax.ShapeDtypeStruct(dt.shape, dt.dtype),
+                 jax.ShapeDtypeStruct((B, F, n, LANES), jnp.float32)]
+    kern = functools.partial(_kernel, n)
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, CHUNK, LANES), lambda b, f, s: (b, f, s, 0)),
+            pl.BlockSpec((1, 1, CHUNK, LANES), lambda b, f, s: (b, f, s, 0)),
+            pl.BlockSpec((1, CHUNK, n), lambda b, f, s: (b, s, 0)),
+            pl.BlockSpec((1, CHUNK, n), lambda b, f, s: (b, s, 0)),
+            pl.BlockSpec((1, LANES, n), lambda b, f, s: (f, 0, 0)),
+            pl.BlockSpec((1, 1, n, LANES), lambda b, f, s: (b, f, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, CHUNK, LANES), lambda b, f, s: (b, f, s, 0)),
+            pl.BlockSpec((1, 1, n, LANES), lambda b, f, s: (b, f, 0, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((n, LANES), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, bm, cm, a_w, h0)
+    return y, h_last

@@ -1,0 +1,138 @@
+"""Compiled-HLO analysis: FLOPs/bytes (cost_analysis) + collective traffic.
+
+``collective_bytes`` is not part of XLA's cost_analysis, so we parse the
+optimized HLO (``compiled.as_text()``) and sum the payload of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+converted to *per-device link bytes* with the standard ring-algorithm
+factors:
+
+    all-reduce      2 * size * (g-1)/g     (reduce-scatter + all-gather)
+    all-gather      size * (g-1)/g         (size = gathered result)
+    reduce-scatter  size * (g-1)/g         (size = input)
+    all-to-all      size * (g-1)/g
+    collective-permute  size
+
+where g is the replica-group size parsed from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# iota replica groups: [16,32]<=[512] — 16 groups of 32
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of all array shapes in a result-type string."""
+    total = 0
+    for m in _ARRAY_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: dict            # op kind -> effective link bytes (global)
+    per_op_count: dict
+    total_bytes: float            # sum of effective link bytes
+
+    def summary(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "per_op_bytes": dict(self.per_op_bytes),
+                "per_op_count": dict(self.per_op_count)}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    per_bytes = defaultdict(float)
+    per_count = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        kind = None
+        for k in _COLLECTIVES:
+            # match op invocation " kind(" or "kind-start("
+            if f" {k}(" in s or f" {k}-start(" in s:
+                kind = k
+                break
+        if kind is None:
+            continue
+        lhs, rhs = s.split("=", 1)
+        # result type(s) are at the start of rhs, before the op name
+        op_pos = rhs.find(kind)
+        result_text = rhs[:op_pos]
+        size = _shape_bytes(result_text)
+        g = _group_size(s)
+        if kind == "all-reduce":
+            eff = 2.0 * size * (g - 1) / g
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            eff = size * (g - 1) / g
+        else:
+            eff = float(size)
+        per_bytes[kind] += eff
+        per_count[kind] += 1
+    return CollectiveStats(per_op_bytes=dict(per_bytes),
+                           per_op_count=dict(per_count),
+                           total_bytes=float(sum(per_bytes.values())))
+
+
+def cost_summary(compiled) -> dict:
+    """flops / bytes from compiled.cost_analysis(), robust to backend quirks."""
+    out = {"flops": None, "bytes_accessed": None, "transcendentals": None}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            out["flops"] = float(ca.get("flops", 0.0))
+            out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+            out["transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:       # pragma: no cover - backend specific
+        out["error"] = str(e)
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {"unavailable": True}
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            v = getattr(ma, field, None)
+            if v is not None:
+                out[field] = int(v)
+    except Exception as e:       # pragma: no cover
+        out["error"] = str(e)
+    return out

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# the two lines above MUST be first: jax locks the device count on first
+# init, and only the dry-run wants 512 placeholder host devices.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+combination on the production mesh, and record memory/cost/collective
+analysis for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The XLA_FLAGS lines below MUST stay the first statements (before any other
+import, including ``from repro...``): jax locks the device count on first
+init, and only the dry-run wants 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..models import make_model, active_param_count, param_count
+from .mesh import make_production_mesh
+from .shapes import SHAPES, SHAPE_IDS, applicable, config_for
+from .steps import make_train_step, make_decode_step, make_prefill_step
+from .analysis import collective_stats, cost_summary, memory_summary
+from .hlo_cost import analyze_hlo
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def build_bundle(arch: str, shape_id: str, mesh, *, aggregator: str = "ota",
+                 flags=None):
+    """flags: runtime options threaded to the model/step (moe_impl,
+    attn_impl, mamba_fused, scan_chunk, ...)."""
+    shape = SHAPES[shape_id]
+    cfg0 = get_config(arch)
+    ok, reason = applicable(cfg0, shape)
+    if not ok:
+        return None, reason
+    cfg = config_for(cfg0, shape)
+    model = make_model(cfg)
+    if shape.kind == "train":
+        # use_kernel=False: on CPU the Pallas kernels run in interpret mode,
+        # which lowers each grid step to a full-buffer dynamic-update-slice
+        # loop — that would pollute the FLOP/byte accounting with artifacts
+        # a real Mosaic kernel doesn't have. The jnp epilogue is the
+        # cost-faithful stand-in for analysis.
+        return make_train_step(model, mesh, aggregator=aggregator,
+                               batch=shape.global_batch, seq=shape.seq_len,
+                               flags=flags, use_kernel=False), ""
+    if shape.kind == "prefill":
+        return make_prefill_step(model, mesh, batch=shape.global_batch,
+                                 seq=shape.seq_len, flags=flags), ""
+    if shape.kind == "decode":
+        from ..models.api import effective_seq
+        cache_len = effective_seq(cfg, shape.seq_len)
+        return make_decode_step(model, mesh, batch=shape.global_batch,
+                                cache_len=cache_len, flags=flags), ""
+    raise ValueError(shape.kind)
+
+
+def run_one(arch: str, shape_id: str, *, multi_pod: bool = False,
+            aggregator: str = "ota", out_dir: Path = DEFAULT_OUT,
+            flags=None, tag: str = "", mesh_data=None) -> dict:
+    mesh_name = "2pod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape_id, "mesh": mesh_name,
+           "aggregator": aggregator, "status": "ok", "tag": tag,
+           "flags": {k: v for k, v in (flags or {}).items()},
+           "mesh_data": mesh_data}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod,
+                                    data_axis=mesh_data)
+        bundle, reason = build_bundle(arch, shape_id, mesh,
+                                      aggregator=aggregator, flags=flags)
+        if bundle is None:
+            rec["status"] = "skipped"
+            rec["reason"] = reason
+            rec["elapsed_s"] = round(time.time() - t0, 1)
+            out_dir.mkdir(parents=True, exist_ok=True)
+            suffix = f"_{tag}" if tag else ""
+            (out_dir / f"{arch}_{shape_id}_{mesh_name}{suffix}.json"
+             ).write_text(json.dumps(rec, indent=1, default=str))
+            return rec
+        lowered = bundle.lower()
+        compiled = lowered.compile()
+        hlo_text = compiled.as_text()
+        rec["memory"] = memory_summary(compiled)
+        rec["cost"] = cost_summary(compiled)          # XLA (scan body once)
+        rec["collectives"] = collective_stats(hlo_text).summary()
+        # trip-count-aware per-device cost (launch/hlo_cost.py)
+        rec["hlo_cost"] = analyze_hlo(hlo_text).summary()
+        cfg = config_for(get_config(arch), SHAPES[shape_id])
+        model = make_model(cfg)
+        aparams = model.abstract_params()
+        rec["param_count"] = param_count(aparams)
+        rec["active_param_count"] = active_param_count(cfg, aparams)
+        rec["n_devices"] = mesh.devices.size
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = out_dir / f"{arch}_{shape_id}_{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=SHAPE_IDS)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--aggregator", default="ota",
+                    choices=("ideal", "ota", "digital"))
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--flag", action="append", default=[],
+                    help="runtime flag key=value (e.g. moe_impl=ep)")
+    ap.add_argument("--mesh-data", type=int, default=None,
+                    help="override data-axis size (model = 256/data)")
+    args = ap.parse_args()
+    flags = {}
+    for kv in args.flag:
+        k, v = kv.split("=", 1)
+        flags[k] = int(v) if v.isdigit() else (v == "true" if v in
+                                               ("true", "false") else v)
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPE_IDS:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    for arch, shape in combos:
+        for mp in meshes:
+            mesh_name = "2pod" if mp else "pod"
+            suffix = f"_{args.tag}" if args.tag else ""
+            path = args.out / f"{arch}_{shape}_{mesh_name}{suffix}.json"
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[skip] {arch} {shape} {mesh_name} (cached)")
+                    continue
+            rec = run_one(arch, shape, multi_pod=mp,
+                          aggregator=args.aggregator, out_dir=args.out,
+                          tag=args.tag, flags=flags or None,
+                          mesh_data=args.mesh_data)
+            flops = (rec.get("cost") or {}).get("flops")
+            print(f"[{rec['status']:7s}] {arch:22s} {shape:12s} {mesh_name:4s}"
+                  f" {rec['elapsed_s']:7.1f}s flops={flops}"
+                  + (f" err={rec.get('error','')[:120]}"
+                     if rec["status"] == "error" else ""))
+
+
+if __name__ == "__main__":
+    main()

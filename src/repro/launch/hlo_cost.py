@@ -1,0 +1,326 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of its
+trip count, which makes every scanned-layer model look ~n_layers/1 cheaper
+than it is. This module re-derives per-device FLOPs / HBM bytes /
+collective link-bytes by walking the HLO call graph:
+
+  * computations are parsed from ``compiled.as_text()``;
+  * call edges (fusion calls / while body+cond / to_apply) carry a
+    multiplier; ``while`` multipliers come from the loop condition's
+    ``compare(iv, constant(N)), direction=LT`` pattern (fallback 1);
+  * per op:   dot  -> 2 * prod(result_dims) * K   (K from contracting dims)
+              conv -> 2 * prod(result) * prod(kernel_spatial) * in_features
+              elementwise/other -> prod(result)   (1 flop per element)
+    (counted in the computation where the op lives, then scaled by the
+    product of multipliers on the call path);
+  * HBM bytes: for top-level ops, sum of operand + result sizes; ops inside
+    fusions are free (XLA's own model); parameters of a fusion are counted
+    at the fusion call site;
+  * collectives: payload converted to effective per-device link bytes with
+    ring factors (see ``COLL_FACTORS``).
+
+This is an analytic approximation (it ignores layout padding and assumes
+ring algorithms) but it is *consistent* across configurations, which is
+what the §Roofline comparisons need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|body|condition|calls)=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(text: str):
+    elems, nbytes = 0, 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    rhs: str               # full right-hand side text
+    opcode: str
+    result_text: str       # result type(s) portion
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+
+
+_OPCODE_RE = re.compile(
+    r"\)?\s*([a-z][\w\-]*)\(")
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{") and "->" in line:
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    cur = _Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # opcode = first word after the result type: find "<type> opcode("
+        op_pos = None
+        opcode = None
+        om = re.search(r"\}?\s([a-z][a-z0-9\-]*)\(", rhs)
+        if om:
+            opcode = om.group(1)
+            op_pos = om.start(1)
+        else:
+            continue
+        result_text = rhs[:op_pos]
+        cur.ops.append(_Op(name, rhs, opcode, result_text))
+    return comps
+
+
+_OPERAND_RE = re.compile(r"\(%?([\w\.\-]+)")
+
+
+def _operand_names(op: _Op) -> list:
+    after = op.rhs.split(op.opcode + "(", 1)
+    if len(after) < 2:
+        return []
+    args = after[1].split(")", 1)[0]
+    return re.findall(r"%?([\w\.\-]+)", args)
+
+
+def _dot_flops(op: _Op, shape_of) -> float:
+    """2 * prod(result) * K, K = product of lhs contracting dims.
+
+    Scheduled HLO omits inline operand types, so operand shapes come from
+    the ``shape_of`` symbol table (op name -> dims list).
+    """
+    names = _operand_names(op)
+    lhs_dims = shape_of(names[0]) if names else None
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+    k = 1
+    if lhs_dims and mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    out_elems, _ = _shape_elems_bytes(op.result_text)
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: _Op, shape_of) -> float:
+    names = _operand_names(op)
+    out_elems, _ = _shape_elems_bytes(op.result_text)
+    kdims = shape_of(names[1]) if len(names) > 1 else None
+    if kdims:
+        kernel = 1
+        for d in kdims:
+            kernel *= d
+        odims = kdims[-1] if kdims else 1
+        return 2.0 * out_elems * max(kernel // max(odims, 1), 1)
+    return 2.0 * out_elems
+
+
+def _group_size(rhs: str) -> int:
+    m = _IOTA_GROUPS_RE.search(rhs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _LIST_GROUPS_RE.search(rhs)
+    if m and m.group(1):
+        return len(m.group(1).split(","))
+    return 2
+
+
+COLL_FACTORS = {
+    "all-reduce": lambda size, g: 2.0 * size * (g - 1) / g,
+    "all-gather": lambda size, g: size * (g - 1) / g,
+    "reduce-scatter": lambda size, g: size * (g - 1) / g,
+    "all-to-all": lambda size, g: size * (g - 1) / g,
+    "collective-permute": lambda size, g: float(size),
+}
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "copy", "copy-start", "copy-done"}
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    per_collective: dict
+    n_while: int
+    while_trips: dict
+
+    def summary(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "per_collective": dict(self.per_collective),
+                "while_trips": dict(self.while_trips)}
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Parse `compare(iv, constant(N)) direction=LT` style conditions."""
+    for op in cond.ops:
+        if op.opcode == "compare" and "direction=LT" in op.rhs:
+            m = _CONST_CMP_RE.search(op.rhs)
+            if m:
+                return max(int(m.group(1)), 1)
+    # constants may be hoisted: look for any constant in the condition
+    for op in cond.ops:
+        m = _CONST_CMP_RE.search(op.rhs)
+        if m and int(m.group(1)) > 1:
+            return int(m.group(1))
+    return 1
+
+
+def analyze_hlo(hlo: str, entry_hint: str = "main") -> HLOCost:
+    comps = parse_computations(hlo)
+    # entry computation: the one named like *main* or the last ENTRY parsed
+    entry = None
+    for name in comps:
+        if entry_hint in name:
+            entry = name
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    flops = defaultdict(float)        # per computation (local)
+    hbm = defaultdict(float)
+    coll = defaultdict(lambda: defaultdict(float))
+    calls = defaultdict(list)         # comp -> [(callee, multiplier)]
+    while_trips = {}
+
+    # symbol table: op name -> result dims (first array shape in result)
+    shape_tab: dict[str, list] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            m = _SHAPE_RE.search(op.result_text)
+            if m:
+                dims = [int(d) for d in m.group(2).split(",")] if m.group(2) \
+                    else []
+                shape_tab.setdefault(op.name, dims)
+
+    def shape_of(name):
+        return shape_tab.get(name)
+
+    for cname, comp in comps.items():
+        in_fusion = cname.startswith("fused") or ".fused" in cname
+        for op in comp.ops:
+            out_elems, out_bytes = _shape_elems_bytes(op.result_text)
+            if op.opcode == "dot":
+                flops[cname] += _dot_flops(op, shape_of)
+            elif op.opcode == "convolution":
+                flops[cname] += _conv_flops(op, shape_of)
+            elif op.opcode in ("while",):
+                body = cond = None
+                bm = re.search(r"body=%?([\w\.\-]+)", op.rhs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.rhs)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                tm = _TRIP_RE.search(op.rhs)
+                if tm:
+                    trips = max(int(tm.group(1)), 1)
+                elif cond in comps:
+                    trips = _trip_count(comps[cond])
+                else:
+                    trips = 1
+                while_trips[op.name] = trips
+                if body in comps:
+                    calls[cname].append((body, float(trips)))
+                if cond in comps:
+                    calls[cname].append((cond, float(trips)))
+                continue
+            elif op.opcode in ("fusion", "call", "custom-call", "map",
+                               "reduce", "reduce-window", "sort", "scatter",
+                               "select-and-scatter", "conditional"):
+                for callee in _CALLED_RE.findall(op.rhs):
+                    if callee in comps:
+                        calls[cname].append((callee, 1.0))
+                if op.opcode == "fusion":
+                    # fusion body flops counted via callee; HBM: params+result
+                    hbm[cname] += out_bytes
+                    _, arg_bytes = _shape_elems_bytes(
+                        op.rhs.split("fusion(", 1)[1].split(")", 1)[0]
+                        if "fusion(" in op.rhs else "")
+                    hbm[cname] += arg_bytes
+                    continue
+            elif op.opcode in _COLLECTIVES or any(
+                    op.opcode == f"{c}-start" for c in _COLLECTIVES):
+                kind = op.opcode.replace("-start", "")
+                g = _group_size(op.rhs)
+                coll[cname][kind] += COLL_FACTORS[kind](out_bytes, g)
+                continue
+            else:
+                if op.opcode not in _SKIP_BYTES_OPS:
+                    flops[cname] += out_elems
+            # HBM accounting for non-fusion top-level ops: result bytes
+            if not in_fusion and op.opcode not in _SKIP_BYTES_OPS and \
+               op.opcode != "fusion":
+                hbm[cname] += out_bytes
+
+    # accumulate over the call graph with multipliers (memoized)
+    memo_f, memo_h, memo_c = {}, {}, {}
+
+    def total(cname, depth=0):
+        if cname in memo_f:
+            return memo_f[cname], memo_h[cname], memo_c[cname]
+        if depth > 64:
+            return 0.0, 0.0, defaultdict(float)
+        f, h = flops[cname], hbm[cname]
+        c = defaultdict(float, coll[cname])
+        for callee, mult in calls[cname]:
+            cf, ch, cc = total(callee, depth + 1)
+            f += mult * cf
+            h += mult * ch
+            for k, v in cc.items():
+                c[k] += mult * v
+        memo_f[cname], memo_h[cname], memo_c[cname] = f, h, c
+        return f, h, c
+
+    f, h, c = (0.0, 0.0, defaultdict(float))
+    if entry is not None:
+        f, h, c = total(entry)
+    return HLOCost(flops=f, hbm_bytes=h,
+                   collective_bytes=float(sum(c.values())),
+                   per_collective=dict(c), n_while=len(while_trips),
+                   while_trips=while_trips)

@@ -1,0 +1,161 @@
+"""Logical-axis -> PartitionSpec resolution (MaxText-style rules).
+
+Model code records a tuple of logical axis names per parameter dimension
+(see models/common.ParamBuilder). This module maps those names to mesh
+axes with two safety rules:
+  * divisibility — a mesh axis is only used if the dimension size is a
+    multiple of the (product of) mesh axis size(s); otherwise fall through
+    to the next candidate (usually replication),
+  * uniqueness — one mesh axis may appear at most once per tensor; if a
+    later dimension requests an axis already consumed, it is replicated.
+
+Default rules (tensor-parallel over "model", expert/FSDP over "data"):
+  heads/kv_heads/mlp/expert_mlp/ssm_inner/lru/vocab -> "model"
+  experts -> "data"   (expert parallelism; kimi-scale weights must shard
+                       over both data and model to fit HBM)
+  batch -> ("pod","data")
+  cache_seq -> "data" only when the batch is not shardable (decode bs=1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# candidate mesh axes per logical axis, in priority order; each candidate is
+# a tuple of mesh axes used together on that dimension
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",)),
+    "vocab": (("model",),),
+    "embed": (),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (),
+    "mlp": (("model",),),
+    "experts": (("data",),),
+    "expert_mlp": (("model",),),
+    "ssm_inner": (("model",),),
+    "ssm_state": (),
+    "dt_rank": (),
+    "lru": (("model",),),
+    "conv": (),
+    "layers": (),
+    "seq": (),
+    "cache_seq": (),
+    "enc_seq": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+
+    @classmethod
+    def default(cls, overrides: Optional[dict] = None):
+        r = dict(DEFAULT_RULES)
+        if overrides:
+            r.update(overrides)
+        return cls(rules=r)
+
+    def spec_for(self, mesh: Mesh, shape: tuple, axes: tuple) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        used: set = set()
+        out = []
+        for dim, name in zip(shape, axes):
+            chosen = None
+            for mesh_axes in self.rules.get(name, ()):
+                if any(a not in mesh.axis_names for a in mesh_axes):
+                    continue
+                if any(a in used for a in mesh_axes):
+                    continue
+                size = int(np.prod([mesh.shape[a] for a in mesh_axes]))
+                if dim % size != 0:
+                    continue
+                chosen = tuple(mesh_axes)
+                used.update(mesh_axes)
+                break
+            out.append(chosen if chosen is None or len(chosen) > 1
+                       else chosen[0])
+        # strip trailing None for a tidy spec
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def tree_specs(self, mesh: Mesh, shapes_tree, axes_tree):
+        """PartitionSpec pytree for (abstract) params + axes trees."""
+        def leaf(s, a):
+            return self.spec_for(mesh, tuple(s.shape), tuple(a))
+        return jax.tree.map(leaf, shapes_tree, axes_tree,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and all(isinstance(e, str) for e in x))
+
+    def tree_shardings(self, mesh: Mesh, shapes_tree, axes_tree):
+        specs = self.tree_specs(mesh, shapes_tree, axes_tree)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def params_specs(mesh: Mesh, abstract_params, axes_tree,
+                 rules: Optional[ShardingRules] = None):
+    rules = rules or ShardingRules.default()
+    # tree.map over two trees: axes leaves are tuples of str — guard is_leaf
+    def leaf(s, a):
+        return rules.spec_for(mesh, tuple(s.shape), tuple(a))
+    return jax.tree.map(leaf, abstract_params, axes_tree)
+
+
+def cache_axes(cache_tree):
+    """Logical axes for a cache pytree, derived from leaf names/shapes."""
+    def walk(path, x):
+        names = [p.key for p in path if hasattr(p, "key")]
+        leafname = names[-1] if names else ""
+        nd = x.ndim
+        lead = ("layers",) if names and names[0] == "groups" else ()
+        body_nd = nd - len(lead)
+        if leafname in ("k", "v"):
+            body = ("batch", "cache_seq", "kv_heads", "head_dim")
+        elif leafname == "pos":
+            body = ("batch", "cache_seq")
+        elif leafname == "conv":
+            body = ("batch", "conv", "ssm_inner")
+        elif leafname == "h" and body_nd == 3:
+            body = ("batch", "ssm_inner", "ssm_state")
+        elif leafname == "h":
+            body = ("batch", "lru")
+        else:
+            body = tuple(None for _ in range(body_nd))
+        assert len(body) == body_nd, (names, x.shape)
+        return lead + body
+    return jax.tree_util.tree_map_with_path(walk, cache_tree)
+
+
+def batch_axes(batch_tree):
+    """Logical axes for a model-input batch dict."""
+    def leaf_axes(path, x):
+        name = path[-1].key
+        if name == "tokens":
+            return ("batch", "seq")
+        if name == "patches":
+            return ("batch", "seq", "embed")
+        if name == "frames":
+            return ("batch", "enc_seq", "embed")
+        return tuple(None for _ in range(x.ndim))
+    return jax.tree_util.tree_map_with_path(leaf_axes, batch_tree)
+
+
+def decode_rules(batch: int, mesh: Mesh) -> ShardingRules:
+    """Rules for decode: shard cache sequence when batch can't shard."""
+    client = [a for a in ("pod", "data") if a in mesh.axis_names]
+    n_client = int(np.prod([mesh.shape[a] for a in client]))
+    if batch % n_client == 0:
+        return ShardingRules.default()
+    # batch unshardable (e.g. long_500k bs=1): sequence-shard the KV cache
+    return ShardingRules.default(overrides={
+        "batch": (),
+        "cache_seq": (("data",),),
+        "seq": (("data",),),
+    })

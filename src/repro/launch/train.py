@@ -1,0 +1,125 @@
+"""FL LM training launcher (module CLI).
+
+Drives the full pipeline on whatever devices exist: offline SCA design
+from the channel statistics -> per-round fading -> wireless collective
+train step -> checkpointing. The same code path scales from the 1-CPU
+container to the 256-chip production mesh (launch with
+XLA_FLAGS=--xla_force_host_platform_device_count=N to simulate N chips).
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --aggregator ota --steps 100 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..checkpoint import save_checkpoint
+from ..core.bounds import ObjectiveWeights
+from ..core.channel import FadingProcess, WirelessConfig, make_deployment
+from ..core import ota_design, digital_design
+from ..models import make_model, param_count
+from ..models.common import ModelConfig
+from ..optim.sgd import SGDConfig
+from .mesh import make_host_mesh, n_clients
+from .steps import fl_round_arrays, make_train_step
+
+
+def synthetic_token_batch(rng, vocab, batch, seq):
+    """Markov token stream with learnable bigram structure."""
+    succ = (np.arange(vocab) * 7 + 3) % vocab
+    toks = np.empty((batch, seq), np.int32)
+    toks[:, 0] = rng.integers(0, vocab, batch)
+    for t in range(1, seq):
+        follow = rng.random(batch) < 0.8
+        toks[:, t] = np.where(follow, succ[toks[:, t - 1]],
+                              rng.integers(0, vocab, batch))
+    return {"tokens": jnp.asarray(toks)}
+
+
+def build_cfg(args) -> ModelConfig:
+    if args.arch:
+        cfg = get_config(args.arch)
+        return cfg.scaled_down() if args.reduced else cfg
+    return ModelConfig(name="fl-lm", arch_type="dense",
+                       n_layers=args.layers, d_model=args.d_model,
+                       n_heads=8, n_kv_heads=4, d_ff=3 * args.d_model,
+                       vocab_size=args.vocab, dtype=jnp.float32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--aggregator", default="ota",
+                    choices=("ideal", "ota", "digital"))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--eta", type=float, default=1.0)
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--g-max", type=float, default=10.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--moe-impl", default="auto", choices=("auto", "ep"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args)
+    model = make_model(cfg)
+    mesh = make_host_mesh(model_axis=1, data_axis=len(jax.devices()))
+    nc = n_clients(mesh)
+    dep = make_deployment(WirelessConfig(n_devices=nc, seed=1))
+    w = ObjectiveWeights.non_convex(eta=args.eta, smooth_l=10.0,
+                                    kappa_nc=0.5 * args.g_max, n=nc)
+    spec = ota_design.OTADesignSpec(
+        lambdas=dep.lambdas, dim=100_000, g_max=args.g_max,
+        e_s=dep.cfg.energy_per_symbol, n0=dep.cfg.noise_power, weights=w)
+    ota_params, _ = ota_design.design_ota_direct(spec)
+    print(f"mesh={dict(mesh.shape)} clients={nc} "
+          f"p_m={np.round(ota_params.participation_levels(dep.lambdas), 3)}")
+
+    flags = {"moe_impl": args.moe_impl} if args.moe_impl != "auto" else None
+    sb = make_train_step(model, mesh, aggregator=args.aggregator,
+                         sgd=SGDConfig(eta=args.eta,
+                                       momentum=args.momentum),
+                         batch=args.batch, seq=args.seq, flags=flags)
+    step = jax.jit(sb.fn, in_shardings=sb.in_shardings,
+                   out_shardings=sb.out_shardings, donate_argnums=(0,))
+    params = model.init(jax.random.key(args.seed))
+    print(f"model: {cfg.name}  params={param_count(params):,}")
+
+    fading = FadingProcess(dep, seed=7)
+    taus = ota_params.thresholds()
+    rng = np.random.default_rng(args.seed)
+    gam_scale = float(np.mean(ota_params.gammas))
+    t0 = time.time()
+    for t in range(args.steps):
+        batch = synthetic_token_batch(rng, cfg.vocab_size, args.batch,
+                                      args.seq)
+        chis = (fading.gains(t) >= taus).astype(np.float64)
+        fl = fl_round_arrays(
+            mesh, gammas=ota_params.gammas / gam_scale, chis=chis,
+            alpha=ota_params.alpha / gam_scale,
+            noise_scale=np.sqrt(ota_params.noise_psd) / ota_params.alpha
+            * 1e-2, levels=255.0)
+        params, loss = step(params, batch, fl, jax.random.key(t))
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+            path = save_checkpoint(args.ckpt_dir, t + 1, params)
+            print(f"checkpoint -> {path}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

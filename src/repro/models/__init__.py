@@ -1,0 +1,9 @@
+from .common import ModelConfig
+from .transformer import Transformer
+from .api import (make_model, batch_spec, make_batch, loss_fn, prefill,
+                  decode_step, effective_seq, param_count,
+                  active_param_count)
+
+__all__ = ["ModelConfig", "Transformer", "make_model", "batch_spec",
+           "make_batch", "loss_fn", "prefill", "decode_step",
+           "effective_seq", "param_count", "active_param_count"]

@@ -1,0 +1,164 @@
+"""Model-level API: inputs, loss, prefill and decode steps (pure functions).
+
+A "batch" is a dict:
+  decoder LM : {"tokens": (B, S) int32}
+  vlm        : {"tokens": (B, S_text) int32, "patches": (B, P, d)}
+  audio      : {"tokens": (B, S_dec) int32, "frames": (B, S_enc, d)}
+
+``effective_seq(cfg, seq)`` clamps the requested sequence to the arch's
+context limit (whisper decoder: 448).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .transformer import Transformer
+
+MOE_AUX_COEF = 0.01
+
+
+def make_model(cfg: ModelConfig) -> Transformer:
+    return Transformer(cfg)
+
+
+def effective_seq(cfg: ModelConfig, seq: int) -> int:
+    if cfg.max_target_positions:
+        return min(seq, cfg.max_target_positions)
+    return seq
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run path)."""
+    s = effective_seq(cfg, seq)
+    spec = {}
+    if cfg.arch_type == "vlm":
+        text = max(s - cfg.vision_prefix, 1)
+        spec["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+        spec["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+    elif cfg.arch_type == "audio":
+        spec["tokens"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_positions, cfg.d_model), cfg.dtype)
+    else:
+        spec["tokens"] = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+    return spec
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array) -> dict:
+    """Concrete random batch matching batch_spec (smoke tests/examples)."""
+    spec = batch_spec(cfg, batch, seq)
+    out = {}
+    k1, k2 = jax.random.split(key)
+    out["tokens"] = jax.random.randint(k1, spec["tokens"].shape, 0,
+                                       cfg.vocab_size, jnp.int32)
+    if "patches" in spec:
+        out["patches"] = jax.random.normal(k2, spec["patches"].shape,
+                                           spec["patches"].dtype)
+    if "frames" in spec:
+        out["frames"] = jax.random.normal(k2, spec["frames"].shape,
+                                          spec["frames"].dtype)
+    return out
+
+
+def _embed_inputs(model: Transformer, params, batch: dict):
+    """Returns (x (B,S,d), positions (B,S), loss_mask (B,S), memory|None)."""
+    cfg = model.cfg
+    tok_emb = params["embed"][batch["tokens"]]
+    memory = None
+    if cfg.arch_type == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(tok_emb.dtype), tok_emb],
+                            axis=1)
+        B, S = x.shape[0], x.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.vision_prefix), bool),
+             jnp.ones((B, batch["tokens"].shape[1]), bool)], axis=1)
+    elif cfg.arch_type == "audio":
+        memory = model.encode(params, batch["frames"])
+        x = tok_emb
+        B, S = x.shape[0], x.shape[1]
+        mask = jnp.ones((B, S), bool)
+    else:
+        x = tok_emb
+        B, S = x.shape[0], x.shape[1]
+        mask = jnp.ones((B, S), bool)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions, mask, memory
+
+
+def loss_fn(model: Transformer, params, batch: dict,
+            flags: Optional[dict] = None):
+    """Mean next-token CE (+ MoE aux). Returns (loss, metrics)."""
+    cfg = model.cfg
+    x, positions, mask, memory = _embed_inputs(model, params, batch)
+    hidden, _, aux = model.forward(params, x, positions, mode="train",
+                                   flags=flags, memory=memory)
+    logits = model.logits(params, hidden)            # (B,S,V)
+    # next-token prediction over text positions
+    tgt_tok = batch["tokens"]
+    n_prefix = logits.shape[1] - tgt_tok.shape[1]    # vision prefix length
+    logits_txt = logits[:, n_prefix:, :]
+    lp = jax.nn.log_softmax(logits_txt[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tgt_tok[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, n_prefix + 1:].astype(jnp.float32)
+    ce = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    loss = ce + MOE_AUX_COEF * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(model: Transformer, params, batch: dict, cache_len: int,
+            flags: Optional[dict] = None):
+    """Process the prompt, build the KV/state cache, return last logits.
+
+    Returns (logits_last (B,V), caches, memory).
+    """
+    cfg = model.cfg
+    x, positions, _, memory = _embed_inputs(model, params, batch)
+    B, S = x.shape[0], x.shape[1]
+    caches = model.init_cache(B, cache_len, dtype=cfg.dtype)
+    fl = dict(flags or {})
+    fl["cache_len"] = cache_len
+    hidden, caches, _ = model.forward(params, x, positions, mode="prefill",
+                                      caches=caches, flags=fl, memory=memory)
+    logits = model.logits(params, hidden[:, -1:, :])[:, 0]
+    return logits, caches, memory
+
+
+def decode_step(model: Transformer, params, token: jnp.ndarray,
+                position: jnp.ndarray, caches, memory=None,
+                flags: Optional[dict] = None):
+    """One-token decode. token: (B,1) int32; position: (B,) absolute index.
+
+    Returns (logits (B,V), new_caches).
+    """
+    cfg = model.cfg
+    x = params["embed"][token]
+    positions = position[:, None].astype(jnp.int32)
+    hidden, caches, _ = model.forward(params, x, positions, mode="decode",
+                                      caches=caches, flags=flags,
+                                      memory=memory)
+    logits = model.logits(params, hidden[:, 0:1, :])[:, 0]
+    return logits, caches
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: only top-k routed experts count)."""
+    total = param_count(params)
+    if cfg.n_experts == 0:
+        return total
+    expert_elems = 0
+    for x in jax.tree.leaves(params):
+        # routed expert weights: (..., E, d, f) — expert dim is axis -3
+        if x.ndim >= 3 and x.shape[-3] == cfg.n_experts:
+            expert_elems += int(x.size)
+    return int(total - expert_elems
+               + expert_elems * cfg.n_experts_per_tok / cfg.n_experts)

@@ -1,0 +1,192 @@
+"""Shared model primitives: config, param builder with logical axes,
+norms, RoPE, initializers.
+
+Every parameter leaf is created through ``ParamBuilder`` which records a
+tuple of *logical axis names* per dimension (MaxText-style). The launcher
+maps logical names -> mesh axes (with divisibility fallbacks) to build
+PartitionSpecs, so model code never mentions the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------- config
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    # layer pattern, cycled over depth: entries in {"global","local","rglru","mamba"}
+    layer_pattern: tuple = ("global",)
+    window_size: int = 4096
+    # MoE
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0            # 0 -> d_model // 16
+    # RG-LRU (hybrid)
+    lru_width: int = 0              # 0 -> d_model
+    conv1d_width: int = 4
+    # encoder-decoder (audio)
+    encoder_layers: int = 0
+    encoder_positions: int = 0      # stub frame embeddings length
+    max_target_positions: int = 0   # decoder context limit (0 = unlimited)
+    # VLM
+    vision_prefix: int = 0          # stub patch embeddings prepended
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # citation / provenance
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank if self.ssm_dt_rank else max(1, self.d_model // 16)
+
+    @property
+    def lru_dim(self) -> int:
+        return self.lru_width if self.lru_width else self.d_model
+
+    def kind(self, layer_idx: int) -> str:
+        return self.layer_pattern[layer_idx % len(self.layer_pattern)]
+
+    @property
+    def is_decoder_only(self) -> bool:
+        return self.encoder_layers == 0
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True iff decode cost is sub-quadratic (window / recurrent)."""
+        return all(k in ("local", "rglru", "mamba") for k in self.layer_pattern)
+
+    def scaled_down(self) -> "ModelConfig":
+        """Reduced variant for CPU smoke tests (<=2 groups, d<=256, <=4 experts)."""
+        pat = self.layer_pattern
+        n_layers = max(len(pat), 2)
+        d = min(self.d_model, 128)
+        heads = min(self.n_heads, 4)
+        kv = min(self.n_kv_heads, heads)
+        hd = d // heads
+        return dataclasses.replace(
+            self, n_layers=n_layers, d_model=d, n_heads=heads, n_kv_heads=kv,
+            head_dim=hd, d_ff=min(self.d_ff, 256) or 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4),
+            n_experts_per_tok=min(self.n_experts_per_tok, 2),
+            ssm_state=min(self.ssm_state, 8), ssm_dt_rank=8 if self.ssm_state else 0,
+            lru_width=min(self.lru_dim, d) if self.lru_width else 0,
+            window_size=min(self.window_size, 64),
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_positions=min(self.encoder_positions, 32),
+            vision_prefix=min(self.vision_prefix, 8),
+            dtype=jnp.float32, name=self.name + "-smoke")
+
+
+# --------------------------------------------------- params with axes
+
+class ParamBuilder:
+    """Creates params and records logical axes per leaf (same tree shape)."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, tree: dict, axes_tree: dict, name: str, shape: tuple,
+              axes: tuple, init: str = "normal", scale: Optional[float] = None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "normal":
+            s = float(scale if scale is not None else 1.0 / np.sqrt(shape[0]))
+            v = (jax.random.normal(self._next(), shape, jnp.float32)
+                 * s).astype(self.dtype)
+        elif init == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.dtype)
+        elif init == "ssm_a":
+            # mamba A_log init: log(1..state) broadcast over channels
+            n = shape[-1]
+            a = jnp.tile(jnp.arange(1, n + 1, dtype=self.dtype), (shape[0], 1))
+            v = jnp.log(a)
+        elif init == "lru_a":
+            # RG-LRU Lambda init so that a in (0.9, 0.999)
+            u = jax.random.uniform(self._next(), shape, self.dtype, 0.9, 0.999)
+            v = jnp.log(jnp.exp(-jnp.log(u) * 8.0) - 1.0)  # softplus^-1(-ln u * 8)/..
+        else:
+            raise ValueError(init)
+        tree[name] = v
+        axes_tree[name] = axes
+        return v
+
+    def scope(self, tree: dict, axes_tree: dict, name: str):
+        sub_p, sub_a = {}, {}
+        tree[name] = sub_p
+        axes_tree[name] = sub_a
+        return sub_p, sub_a
+
+
+def stack_trees(trees: list):
+    """Stack a list of identical pytrees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_axes(axes_tree: dict):
+    """Prepend the 'layers' logical axis to every leaf of an axes tree."""
+    return jax.tree.map(lambda a: ("layers",) + tuple(a), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ------------------------------------------------------------ functional
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d_half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(0, d_half, dtype=jnp.float32) / d_half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,Dh)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

@@ -1,0 +1,305 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid/VLM) and the
+encoder-decoder (whisper-style) — all built from `layers.py` blocks.
+
+Depth is organized as scanned *pattern groups*: one group = one pass of
+``cfg.layer_pattern``. ``n_groups = n_layers // len(pattern)`` groups are
+stacked (leading "layers" axis) and executed with ``jax.lax.scan`` to keep
+the lowered HLO small across the 40-combination dry-run; remainder layers
+(`n_layers % len(pattern)`) run unrolled as the "tail".
+
+Params / caches are nested dicts:
+    params = {embed, groups: {b0: {...}, b1: ...}, tail: {"0": {b0:...}},
+              final_norm, lm_head [, enc_groups, enc_tail]}
+Axes trees mirror params exactly (tuples of logical axis names).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamBuilder, rms_norm, stack_axes
+from . import layers as L
+
+
+# ----------------------------------------------------------- layer builds
+
+def _init_layer(pb: ParamBuilder, cfg: ModelConfig, kind: str,
+                cross: bool, moe: bool) -> tuple[dict, dict]:
+    p, a = {}, {}
+    pb.param(p, a, "ln1", (cfg.d_model,), ("embed",), init="ones")
+    if kind in ("global", "local", "encoder"):
+        sp, sa = pb.scope(p, a, "attn")
+        L.init_attention(pb, sp, sa, cfg)
+    elif kind == "mamba":
+        sp, sa = pb.scope(p, a, "mamba")
+        L.init_mamba(pb, sp, sa, cfg)
+    elif kind == "rglru":
+        sp, sa = pb.scope(p, a, "rec")
+        L.init_rglru(pb, sp, sa, cfg)
+    else:
+        raise ValueError(kind)
+    if cross and kind != "encoder":
+        pb.param(p, a, "ln_cross", (cfg.d_model,), ("embed",), init="ones")
+        sp, sa = pb.scope(p, a, "cross")
+        L.init_attention(pb, sp, sa, cfg, cross=True)
+    if kind != "mamba" and cfg.d_ff > 0:
+        pb.param(p, a, "ln2", (cfg.d_model,), ("embed",), init="ones")
+        if moe:
+            sp, sa = pb.scope(p, a, "moe")
+            L.init_moe(pb, sp, sa, cfg)
+        else:
+            sp, sa = pb.scope(p, a, "mlp")
+            L.init_mlp(pb, sp, sa, cfg)
+    return p, a
+
+
+def _layer_apply(cfg: ModelConfig, kind: str, p: dict, x, positions, *,
+                 cache=None, mode="train", flags=None, memory=None):
+    """One transformer layer. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("global", "local", "encoder"):
+        y, new_cache = L.attention_apply(
+            cfg, p["attn"], h, positions, kind=kind,
+            cache=None if cache is None else cache.get("attn"),
+            mode=mode, flags=flags)
+        new_cache = None if new_cache is None else {"attn": new_cache}
+    elif kind == "mamba":
+        y, nc = L.mamba_apply(cfg, p["mamba"], h,
+                              cache=None if cache is None else cache.get("mamba"),
+                              mode=mode, flags=flags)
+        new_cache = {"mamba": nc} if (mode != "train") else None
+    elif kind == "rglru":
+        y, nc = L.rglru_apply(cfg, p["rec"], h,
+                              cache=None if cache is None else cache.get("rec"),
+                              mode=mode, flags=flags)
+        new_cache = {"rec": nc} if (mode != "train") else None
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "cross" in p:
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        y, _ = L.attention_apply(cfg, p["cross"], h, positions, kind="global",
+                                 mode="train", flags=flags, cross_kv=memory)
+        x = x + y
+    if "ln2" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, aux = L.moe_apply(cfg, p["moe"], h, flags=flags)
+        else:
+            y = L.mlp_apply(cfg, p["mlp"], h)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int,
+                      cache_len: int, dtype, cross_len: int = 0) -> dict:
+    c = {}
+    if kind in ("global", "local"):
+        eff = min(cache_len, cfg.window_size) if kind == "local" else cache_len
+        c["attn"] = L.init_attention_cache(cfg, batch, eff, dtype)
+    elif kind == "mamba":
+        c["mamba"] = L.init_mamba_cache(cfg, batch, dtype)
+    elif kind == "rglru":
+        c["rec"] = L.init_rglru_cache(cfg, batch, dtype)
+    return c
+
+
+# ------------------------------------------------------------ full model
+
+class Transformer:
+    """Functional model wrapper for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        pat = cfg.layer_pattern
+        self.n_groups = cfg.n_layers // len(pat)
+        self.n_tail = cfg.n_layers % len(pat)
+        self.cross = cfg.encoder_layers > 0
+        self._axes = None
+
+    # ----- init ---------------------------------------------------------
+
+    def _init_fn(self, key: jax.Array):
+        cfg = self.cfg
+        pat = cfg.layer_pattern
+        moe = cfg.n_experts > 0
+        pb = ParamBuilder(key, dtype=cfg.dtype)
+        params, axes = {}, {}
+        pb.param(params, axes, "embed", (cfg.vocab_size, cfg.d_model),
+                 ("vocab", "embed"), scale=0.02)
+        pb.param(params, axes, "final_norm", (cfg.d_model,), ("embed",),
+                 init="ones")
+        pb.param(params, axes, "lm_head", (cfg.d_model, cfg.vocab_size),
+                 ("embed", "vocab"), scale=0.02)
+
+        def init_group(k):
+            gpb = ParamBuilder(k, dtype=cfg.dtype)
+            gp, ga = {}, {}
+            for i, kind in enumerate(pat):
+                p_i, a_i = _init_layer(gpb, cfg, kind, self.cross, moe)
+                gp[f"b{i}"] = p_i
+                ga[f"b{i}"] = a_i
+            return gp, ga
+
+        if self.n_groups > 0:
+            keys = jax.random.split(pb._next(), self.n_groups)
+            params["groups"] = jax.vmap(lambda k: init_group(k)[0])(keys)
+            axes["groups"] = stack_axes(self._recorded_axes(init_group))
+        tail = {}
+        tail_axes = {}
+        for j in range(self.n_tail):
+            p_j, a_j = _init_layer(pb, cfg, pat[j], self.cross, moe)
+            tail[str(j)] = p_j
+            tail_axes[str(j)] = a_j
+        if tail:
+            params["tail"] = tail
+            axes["tail"] = tail_axes
+        if self.cross:
+            def init_enc_group(k):
+                gpb = ParamBuilder(k, dtype=cfg.dtype)
+                gp, ga = {}, {}
+                p_i, a_i = _init_layer(gpb, cfg, "encoder", False, False)
+                gp["b0"] = p_i
+                ga["b0"] = a_i
+                return gp, ga
+            keys = jax.random.split(pb._next(), cfg.encoder_layers)
+            params["enc_groups"] = jax.vmap(lambda k: init_enc_group(k)[0])(keys)
+            axes["enc_groups"] = stack_axes(
+                self._recorded_axes(init_enc_group))
+            pb.param(params, axes, "enc_norm", (cfg.d_model,), ("embed",),
+                     init="ones")
+        self._axes = axes
+        return params
+
+    @staticmethod
+    def _recorded_axes(init_group_fn):
+        """Trace the group init abstractly to recover its axes tree."""
+        holder = {}
+
+        def run(k):
+            gp, ga = init_group_fn(k)
+            holder["axes"] = ga
+            return gp
+
+        jax.eval_shape(run, jax.random.key(0))
+        return holder["axes"]
+
+    def init(self, key: jax.Array):
+        return self._init_fn(key)
+
+    def abstract_params(self):
+        return jax.eval_shape(self._init_fn, jax.random.key(0))
+
+    @property
+    def axes(self):
+        if self._axes is None:
+            self.abstract_params()
+        return self._axes
+
+    # ----- caches -------------------------------------------------------
+
+    def init_cache(self, batch: int, cache_len: int, dtype=None,
+                   encoder_len: int = 0):
+        cfg = self.cfg
+        dtype = dtype or cfg.dtype
+        pat = cfg.layer_pattern
+        cache = {}
+        if self.n_groups > 0:
+            one = {f"b{i}": _init_layer_cache(cfg, kind, batch, cache_len, dtype)
+                   for i, kind in enumerate(pat)}
+            # stack over groups, preserving fill values (-1 position buffers)
+            cache["groups"] = jax.tree.map(
+                lambda o: jnp.broadcast_to(o, (self.n_groups,) + o.shape), one)
+        if self.n_tail:
+            cache["tail"] = {str(j): _init_layer_cache(cfg, pat[j], batch,
+                                                       cache_len, dtype)
+                             for j in range(self.n_tail)}
+        return cache
+
+    # ----- forward ------------------------------------------------------
+
+    def _embed(self, params, tokens):
+        return params["embed"][tokens]
+
+    def encode(self, params, enc_embeds, flags=None):
+        """Run the (stub-fed) encoder stack. enc_embeds: (B, S_enc, d)."""
+        cfg = self.cfg
+        x = enc_embeds
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, gp):
+            h, _, _ = _layer_apply(cfg, "encoder", gp["b0"], carry, pos,
+                                   mode="train", flags=None)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_groups"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def forward(self, params, x, positions, *, mode="train", caches=None,
+                flags=None, memory=None, remat=True):
+        """Backbone over embeddings x (B,S,d). Returns (hidden, caches, aux)."""
+        cfg = self.cfg
+        pat = cfg.layer_pattern
+        flags = dict(flags or {})
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def group_body(x, gp, gc, mem):
+            new_gc = {} if gc is not None else None
+            aux_sum = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(pat):
+                c_i = None if gc is None else gc.get(f"b{i}")
+                x, nc, aux = _layer_apply(
+                    cfg, kind, gp[f"b{i}"], x, positions, cache=c_i,
+                    mode=mode, flags=flags, memory=mem)
+                aux_sum = aux_sum + aux
+                if new_gc is not None:
+                    new_gc[f"b{i}"] = nc if nc is not None else c_i
+            return x, new_gc, aux_sum
+
+        if self.n_groups > 0:
+            gc_all = None if caches is None else caches["groups"]
+            mem_all = memory
+            if self.cross and memory is not None:
+                # per-group cross K/V: same encoder memory for every layer
+                pass
+
+            def scan_body(carry, xs):
+                x = carry
+                if gc_all is None:
+                    gp = xs
+                    gc = None
+                else:
+                    gp, gc = xs
+                x, new_gc, aux = group_body(x, gp, gc, mem_all)
+                return x, (new_gc, aux)
+
+            if remat and mode == "train":
+                scan_body = jax.checkpoint(scan_body)
+            xs = (params["groups"] if gc_all is None
+                  else (params["groups"], gc_all))
+            x, (new_gcs, auxs) = jax.lax.scan(scan_body, x, xs)
+            aux_total = aux_total + jnp.sum(auxs)
+            if caches is not None:
+                caches = dict(caches)
+                caches["groups"] = new_gcs
+        if self.n_tail:
+            new_tail = {}
+            for j in range(self.n_tail):
+                c_j = None if caches is None else caches["tail"][str(j)]
+                x, nc, aux = _layer_apply(
+                    cfg, pat[j], params["tail"][str(j)], x, positions,
+                    cache=c_j, mode=mode, flags=flags, memory=memory)
+                aux_total = aux_total + aux
+                new_tail[str(j)] = nc if nc is not None else c_j
+            if caches is not None:
+                caches["tail"] = new_tail
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, caches, aux_total
+
+    def logits(self, params, hidden):
+        return jnp.einsum("bsd,dv->bsv", hidden, params["lm_head"])

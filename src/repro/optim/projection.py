@@ -1,0 +1,15 @@
+"""Projection onto the l2 ball W = {||w|| <= radius} (paper eq. (2)/(13))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def project_l2_ball(params, radius: float):
+    """Project the flattened parameter pytree onto ||w||_2 <= radius."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(params))
+    nrm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        params)

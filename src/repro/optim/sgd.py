@@ -1,0 +1,42 @@
+"""SGD (+momentum, weight decay) on parameter pytrees.
+
+The paper's update (13) is plain projected SGD; momentum/weight-decay are
+provided for the beyond-paper LM training driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    eta: float = 1e-2
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+
+
+def sgd_init(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_update(cfg: SGDConfig, params, grads, mom):
+    """Returns (new_params, new_mom)."""
+    if cfg.weight_decay:
+        grads = jax.tree.map(
+            lambda g, p: g + cfg.weight_decay * p.astype(g.dtype),
+            grads, params)
+    if cfg.momentum:
+        mom = jax.tree.map(lambda m, g: cfg.momentum * m + g.astype(m.dtype),
+                           mom, grads)
+        upd = mom
+    else:
+        upd = grads
+    params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32)
+                      - cfg.eta * u.astype(jnp.float32)).astype(p.dtype),
+        params, upd)
+    return params, mom

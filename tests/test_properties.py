@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.sca import simplex_projection
+from repro.core.quantize import quantize_np, quantization_variance_bound
+from repro.core.channel import participation_probability
+from repro.core.bounds import bias_sum
+from repro.kernels import ops, ref
+
+finite_floats = st.floats(-1e3, 1e3, allow_nan=False, allow_infinity=False)
+
+
+@given(hnp.arrays(np.float64, st.integers(1, 40), elements=finite_floats))
+@settings(max_examples=80, deadline=None)
+def test_simplex_projection_valid(v):
+    p = simplex_projection(v)
+    assert np.all(p >= -1e-12)
+    assert abs(p.sum() - 1.0) < 1e-9
+
+
+@given(hnp.arrays(np.float64, st.integers(2, 30),
+                  elements=st.floats(0, 1, allow_nan=False)))
+@settings(max_examples=50, deadline=None)
+def test_simplex_projection_idempotent_on_simplex(v):
+    s = v.sum()
+    if s <= 1e-9:
+        return
+    p0 = v / s
+    p = simplex_projection(p0)
+    np.testing.assert_allclose(p, p0, atol=1e-9)
+
+
+@given(hnp.arrays(np.float64, st.integers(1, 200),
+                  elements=st.floats(-100, 100, allow_nan=False)),
+       st.integers(1, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_quantizer_range_and_grid(g, r, seed):
+    """Quantized output stays within [-m, m] and on the grid."""
+    rng = np.random.default_rng(seed)
+    q = quantize_np(g, r, rng)
+    m = np.max(np.abs(g))
+    assert np.all(np.abs(q) <= m + 1e-9)
+    if m > 0:
+        s = 2 ** r - 1
+        delta = 2 * m / s
+        idx = (q + m) / delta
+        np.testing.assert_allclose(idx, np.round(idx), atol=1e-6)
+
+
+@given(st.integers(1, 10), st.integers(1, 16),
+       st.floats(1e-6, 1e3, allow_nan=False))
+@settings(max_examples=40, deadline=None)
+def test_quantization_variance_bound_positive(d, r, m):
+    assert quantization_variance_bound(d, r, m) >= 0
+
+
+@given(hnp.arrays(np.float64, st.integers(1, 20),
+                  elements=st.floats(1e-14, 1e-8)),
+       st.floats(0.0, 1e-3))
+@settings(max_examples=40, deadline=None)
+def test_participation_probability_in_unit_interval(lam, thr):
+    p = participation_probability(np.full_like(lam, thr), lam)
+    assert np.all(p >= 0) and np.all(p <= 1)
+
+
+@given(hnp.arrays(np.float64, st.integers(1, 30),
+                  elements=st.floats(0, 1, allow_nan=False)))
+@settings(max_examples=50, deadline=None)
+def test_bias_sum_nonnegative_and_zero_iff_uniform(p):
+    s = p.sum()
+    if s <= 1e-9:
+        return
+    p = p / s
+    b = bias_sum(p)
+    assert b >= -1e-15
+    n = p.shape[0]
+    if np.allclose(p, 1.0 / n, atol=1e-12):
+        assert b < 1e-12
+
+
+@given(st.integers(1, 3), st.integers(1, 300), st.integers(1, 150),
+       st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_linear_scan_kernel_property(B, S, D, seed):
+    """Kernel == sequential oracle for random stable dynamics."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    a = jax.random.uniform(k1, (B, S, D), minval=0.0, maxval=1.0)
+    b = jax.random.normal(k2, (B, S, D)) * 0.2
+    h0 = jax.random.normal(k3, (B, D))
+    ha, hl = ops.linear_scan(a, b, h0, use_kernel=True)
+    ra, rl = ref.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(ra), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(rl), atol=3e-5)
