@@ -1,0 +1,12 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test verify bench
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+verify:
+	./scripts/verify.sh
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run

@@ -1,0 +1,117 @@
+"""NumPy-vs-JAX FL engine wall-clock benchmark (ROADMAP north-star check).
+
+Runs the same Monte-Carlo FL workload through both ``FLTrainer`` backends —
+the Python-loop NumPy reference and the vmap/scan JAX engine (Pallas
+epilogue kernels, interpret mode on CPU) — and reports wall-clock plus the
+steady-state speedup. Both backends replay identical random streams, so the
+max trajectory deviation is recorded as a built-in parity check.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
+
+Writes experiments/results/engine_bench.json.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import (design_digital, design_ota, make_sc_setup, save_result)
+from repro.core import baselines as B
+from repro.fl.trainer import FLTrainer
+
+
+def _time_backend(trainer, agg, backend, *, rounds, trials, eval_every,
+                  seed, repeats=1):
+    best, log = np.inf, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        log = trainer.run(agg, rounds=rounds, trials=trials,
+                          eval_every=eval_every, seed=seed, backend=backend)
+        best = min(best, time.perf_counter() - t0)
+    return best, log
+
+
+def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
+        rounds: int = 200, samples_per_device: int = 1000):
+    """Benchmark entry (also wired into benchmarks.run).
+
+    Defaults are a fig2-sized run: N=20 devices, 3 Monte-Carlo trials, 200
+    rounds on the strongly convex softmax task at the paper protocol's
+    1000 samples/device (``make_sc_setup`` default). ``quick`` keeps that;
+    full mode doubles the horizon.
+    """
+    if not quick:
+        rounds *= 2
+    eval_every = max(rounds // 20, 1) * 2
+    task, ds, dep, eta_max = make_sc_setup(
+        n_devices, samples_per_device=samples_per_device,
+        n_train_per_class=max((n_devices * samples_per_device) // 10, 200))
+    eta = 0.25 * eta_max
+    params, _ = design_ota(task, dep, eta)
+    dig_params, _ = design_digital(task, dep, eta)
+    trainer = FLTrainer(task, ds, dep, eta=eta)
+
+    suite = [
+        ("proposed_ota", B.ProposedOTA(params), rounds),
+        ("vanilla_ota", B.VanillaOTA(task.dim, task.g_max,
+                                     dep.cfg.energy_per_symbol,
+                                     dep.cfg.noise_power), rounds),
+        # digital replays one (T, N, d) dither tensor per trial; keep its
+        # horizon shorter so the benchmark stays laptop-sized
+        ("proposed_digital", B.ProposedDigital(dig_params), max(rounds // 4, 1)),
+    ]
+    # warm the task's jitted grad/loss functions once so the NumPy timing
+    # measures the backend, not shared first-call compilation
+    trainer.run(suite[0][1], rounds=2, trials=1, eval_every=1, seed=1,
+                backend="numpy")
+    rows, results = [], []
+    for key, agg, t_rounds in suite:
+        t_np, log_np = _time_backend(trainer, agg, "numpy", rounds=t_rounds,
+                                     trials=trials, eval_every=eval_every,
+                                     seed=5)
+        t_cold, _ = _time_backend(trainer, agg, "jax", rounds=t_rounds,
+                                  trials=trials, eval_every=eval_every,
+                                  seed=5)
+        t_warm, log_jx = _time_backend(trainer, agg, "jax", rounds=t_rounds,
+                                       trials=trials, eval_every=eval_every,
+                                       seed=5, repeats=2)
+        dev = float(np.max(np.abs(log_np.global_loss - log_jx.global_loss)))
+        res = {
+            "scheme": agg.name, "rounds": t_rounds, "trials": trials,
+            "n_devices": n_devices, "dim": task.dim,
+            "numpy_s": t_np, "jax_cold_s": t_cold, "jax_warm_s": t_warm,
+            "speedup_warm": t_np / t_warm, "speedup_cold": t_np / t_cold,
+            "max_loss_deviation": dev,
+        }
+        results.append(res)
+        rows.append((f"engine_bench/{key}",
+                     t_warm * 1e6 / max(t_rounds * trials, 1),
+                     f"speedup={res['speedup_warm']:.1f}x;parity={dev:.1e}"))
+    payload = {"quick": quick, "results": results}
+    save_result("engine_bench", payload)
+    return rows, payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (N=10, 2 trials, 40 rounds)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows, payload = run(quick=True, n_devices=10, trials=2, rounds=40,
+                            samples_per_device=100)
+    else:
+        rows, payload = run(quick=True)
+    print("scheme,backend=numpy[s],jax_cold[s],jax_warm[s],speedup,parity")
+    for r in payload["results"]:
+        print(f"{r['scheme']},{r['numpy_s']:.3f},{r['jax_cold_s']:.3f},"
+              f"{r['jax_warm_s']:.3f},{r['speedup_warm']:.1f}x,"
+              f"{r['max_loss_deviation']:.1e}")
+    worst = min(r["speedup_warm"] for r in payload["results"][:2])
+    print(f"min OTA steady-state speedup: {worst:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

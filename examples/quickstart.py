@@ -5,6 +5,14 @@ trains softmax regression over a heterogeneous wireless deployment and
 compares against zero-bias Vanilla OTA-FL and the noiseless ideal.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Backends: ``FLTrainer.run(..., backend=...)`` selects the simulation
+engine. "numpy" is the reference Python-loop oracle; "jax" runs the
+vectorized vmap/scan engine (``repro.fl.engine``) whose PS epilogue and
+quantizer go through the Pallas kernels; "auto" (default) picks the engine
+whenever the scheme has a JAX port and falls back to NumPy otherwise.
+Both replay identical random streams, so the trajectories match to ~1e-5 —
+the engine is just much faster at Monte-Carlo scale.
 """
 import numpy as np
 
@@ -52,7 +60,10 @@ def main():
                 B.VanillaOTA(task.dim, task.g_max,
                              dep.cfg.energy_per_symbol,
                              dep.cfg.noise_power)):
-        log = trainer.run(agg, rounds=80, trials=2, eval_every=20, seed=5)
+        # backend="auto" (default) routes ported schemes through the JAX
+        # vmap/scan engine; backend="numpy" forces the reference loop
+        log = trainer.run(agg, rounds=80, trials=2, eval_every=20, seed=5,
+                          backend="auto")
         acc, _ = log.mean_std("accuracy")
         print(f"{agg.name:25s} accuracy per 20 rounds: {np.round(acc, 3)}")
 

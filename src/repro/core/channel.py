@@ -79,6 +79,28 @@ def make_deployment(cfg: WirelessConfig, seed: Optional[int] = None) -> Deployme
     return Deployment(distances_m=s, lambdas=lambdas, cfg=cfg)
 
 
+def sample_fading(lambdas: np.ndarray, seed: int, t: int) -> np.ndarray:
+    """Complex h_{m,t} ~ CN(0, Lambda_m) for one round, deterministic in
+    (seed, t). Single source of truth for the fading law: the per-round
+    ``FadingProcess`` and the batched tensor sampler both call this."""
+    rng = np.random.default_rng(np.random.SeedSequence(entropy=(int(seed), int(t))))
+    n = lambdas.shape[0]
+    scale = np.sqrt(lambdas / 2.0)
+    re = rng.normal(size=n) * scale
+    im = rng.normal(size=n) * scale
+    return re + 1j * im
+
+
+def sample_fading_batch(lambdas: np.ndarray, seed: int,
+                        rounds: int) -> np.ndarray:
+    """Batched fading tensor (T, N): rows t = 0..rounds-1 of the same stream
+    ``FadingProcess(dep, seed).sample(t)`` draws, bit-identical.  The JAX
+    engine consumes one (trials, T, N) stack of these per Monte-Carlo run."""
+    if rounds == 0:
+        return np.zeros((0, lambdas.shape[0]), dtype=np.complex128)
+    return np.stack([sample_fading(lambdas, seed, t) for t in range(rounds)])
+
+
 class FadingProcess:
     """Rayleigh block-fading generator, i.i.d. across rounds.
 
@@ -92,12 +114,7 @@ class FadingProcess:
         self._seed = seed
 
     def sample(self, t: int) -> np.ndarray:
-        rng = np.random.default_rng(np.random.SeedSequence(entropy=(self._seed, int(t))))
-        n = self._lambdas.shape[0]
-        scale = np.sqrt(self._lambdas / 2.0)
-        re = rng.normal(size=n) * scale
-        im = rng.normal(size=n) * scale
-        return re + 1j * im
+        return sample_fading(self._lambdas, self._seed, t)
 
     def gains(self, t: int) -> np.ndarray:
         """|h_{m,t}| magnitudes for round t."""

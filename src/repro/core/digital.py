@@ -102,3 +102,39 @@ def digital_round(params: DigitalParams, grads: Sequence[np.ndarray],
             acc += gq / params.nus[m]
             latency += payloads[m] / (params.bandwidth_hz * rates[m])
     return acc, chi, float(latency)
+
+
+def digital_round_jax(params: DigitalParams, grads, h, u,
+                      *, use_kernel: bool = True):
+    """One digital-FL uplink round, pure-JAX (jit/vmap/scan-able).
+
+    Numerically mirrors :func:`digital_round` — same threshold rule, same
+    PS reweighting, same TDMA latency — with each device's dithered
+    quantize-dequantize dispatched through the fused Pallas kernel
+    ``kernels/dithered_quant.py`` (interpret mode on CPU).
+
+    Args:
+      params: offline-designed digital parameters (static under jit).
+      grads:  (N, d) stacked local gradients.
+      h:      (N,) complex fading realizations.
+      u:      (N, d) dither uniforms, one row per device. Passing the NumPy
+              trainer's dither stream row-for-row reproduces its quantized
+              payloads bit-for-bit (up to 1-ulp kernel rounding).
+
+    Returns:
+      (ghat, chi, latency_s): PS estimate (d,), participation indicators
+      (N,), and the realized TDMA round latency [s].
+    """
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    chi = (jnp.abs(h) >= jnp.asarray(params.rhos)).astype(grads.dtype)
+    rates = np.maximum(params.rates(), 1e-12)
+    lat_m = jnp.asarray(params.payloads() / (params.bandwidth_hz * rates))
+    levels = (2.0 ** params.r_bits.astype(np.float64) - 1.0)
+    gq = ops.dithered_quantize_batch(grads, jnp.asarray(levels), u,
+                                     use_kernel=use_kernel)
+    acc = (chi / jnp.asarray(params.nus)) @ gq
+    latency = jnp.sum(chi * lat_m)
+    return acc, chi, latency

@@ -118,6 +118,38 @@ def ota_round(params: OTAParams, grads: Sequence[np.ndarray], h: np.ndarray,
     return ghat, chi
 
 
+def ota_round_jax(params: OTAParams, grads, h, z01, *, use_kernel: bool = True):
+    """One OTA-FL uplink round, pure-JAX (jit/vmap/scan-able).
+
+    Numerically mirrors :func:`ota_round` — same thresholds, same truncated
+    inversion, same post-scale — with the PS epilogue (post-scale + AWGN
+    injection, eq. (6)) dispatched through the fused Pallas kernel
+    ``kernels/ota_combine.py`` (interpret mode on CPU).
+
+    Args:
+      params: offline-designed OTA parameters (static under jit).
+      grads:  (N, d) stacked local gradients.
+      h:      (N,) complex fading realizations.
+      z01:    (d,) standard-normal AWGN draws (scaled by sqrt(N0) here, so
+              callers can replay the NumPy trainer's noise stream exactly).
+
+    Returns:
+      (ghat, chi): PS estimate (d,) and participation indicators (N,).
+    """
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    taus = jnp.asarray(params.thresholds())
+    chi = (jnp.abs(h) >= taus).astype(grads.dtype)
+    weights = chi * jnp.asarray(params.gammas, grads.dtype)
+    acc = weights @ grads
+    z = np.sqrt(params.noise_psd) * z01
+    ghat = ops.ota_combine_with_noise(acc, params.alpha, z,
+                                      use_kernel=use_kernel)
+    return ghat, chi
+
+
 def expected_participation(params: OTAParams, lambdas: np.ndarray) -> np.ndarray:
     """E[chi^A_m] = exp(-tau_m^2/Lambda_m)."""
     return participation_probability(params.thresholds(), lambdas)

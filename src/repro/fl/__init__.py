@@ -1,4 +1,6 @@
 from .tasks import SoftmaxRegressionTask, MLPTask
 from .trainer import FLTrainer, TrainLog
+from .engine import FLEngine, JaxAggregator, as_functional
 
-__all__ = ["SoftmaxRegressionTask", "MLPTask", "FLTrainer", "TrainLog"]
+__all__ = ["SoftmaxRegressionTask", "MLPTask", "FLTrainer", "TrainLog",
+           "FLEngine", "JaxAggregator", "as_functional"]

@@ -1,0 +1,347 @@
+"""JAX-native vectorized FL simulation engine.
+
+The NumPy trainer (``fl/trainer.py`` + ``core/baselines.py``) runs the
+paper's Monte-Carlo protocol with Python-level ``for trial / for t`` loops —
+the reference oracle, but slow. This engine runs the same (trials, rounds)
+recursion of eq. (2)/(13) as ``vmap(lax.scan)`` over a *functional*
+aggregator protocol, with the PS epilogue (post-scale + AWGN, eq. (6))
+dispatched through the fused Pallas kernel ``kernels/ota_combine.py`` and
+the digital payload compressor through ``kernels/dithered_quant.py``
+(interpret mode on CPU, Mosaic on TPU).
+
+RNG contract — the engine *replays the NumPy trainer's random streams*:
+
+  * fading: ``channel.sample_fading_batch`` reproduces
+    ``FadingProcess(dep, seed*1000 + trial).sample(t)`` bit-for-bit;
+  * PS AWGN: every OTA aggregator draws exactly one ``normal(d)`` per round
+    from ``default_rng((seed, trial, 17))``, so one ``standard_normal((T, d))``
+    block per trial replays the stream;
+  * dither: digital aggregators consume one ``uniform(d)`` per *participating*
+    device per round, in device order; participation is a deterministic
+    function of the precomputed fading, so the stream is replayed offline.
+
+Model state is carried in float64 (via the scoped x64 context) while local
+gradients/losses are computed in float32 — exactly the NumPy trainer's mixed
+precision — so the two backends agree per round to ~1e-5 over hundreds of
+rounds. ``tests/test_engine_parity.py`` pins this.
+
+Caveats: dither replay assumes participating gradients are nonzero
+(``quantize_np`` skips its dither draw on an exactly-zero gradient, which is
+measure-zero for the paper's tasks); and digital schemes materialize the
+full (trials, T, N, d) dither tensor up front — O(trials*T*N*d*8) bytes —
+so very long digital horizons belong on the NumPy backend until the replay
+is chunked per eval segment (see ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from ..core import baselines as B
+from ..core.channel import Deployment, sample_fading_batch
+from ..core.digital import digital_round_jax
+from ..core.ota import ota_round_jax
+from ..kernels import ops
+from .trainer import TrainLog
+
+#: AggregatorFn protocol: (grads (N,d) f64, h (N,) complex, z01 (d,) f64,
+#: u (N,d) f64, t i64) -> (ghat (d,), latency scalar). Latency is in channel
+#: uses for OTA schemes (converted to seconds by the engine via 1/B) and in
+#: seconds for digital schemes, matching ``core.baselines.RoundResult``.
+AggregatorFn = Callable[..., tuple]
+
+
+@dataclasses.dataclass(eq=False)
+class JaxAggregator:
+    """A wireless aggregation scheme in functional form.
+
+    ``round_fn`` must be pure and jit/vmap/scan-able; scheme constants
+    (pre-scalers, thresholds, post-scalers) are baked in as closure
+    constants, mirroring the paper's offline-designed, time-invariant
+    parameters.
+    """
+
+    name: str
+    is_ota: bool
+    round_fn: AggregatorFn
+    needs_noise: bool = True
+    needs_dither: bool = False
+    # habs (T, N) -> bool (T, N): which (round, device) slots consume a
+    # dither draw in the NumPy reference (only used when needs_dither)
+    dither_mask_np: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    # jitted trial runners keyed on (task id, shapes, schedule); kept on the
+    # aggregator so step-size grid searches across trainer instances reuse
+    # the compiled scan
+    _runner_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+
+# ------------------------------------------------------- functional ports
+
+def _ideal_fedavg() -> JaxAggregator:
+    def round_fn(grads, h, z01, u, t):
+        return jnp.mean(grads, axis=0), 0.0
+
+    return JaxAggregator(name=B.IdealFedAvg.name, is_ota=True,
+                         round_fn=round_fn, needs_noise=False)
+
+
+def _from_ota_params(params, name: str, use_kernel: bool) -> JaxAggregator:
+    def round_fn(grads, h, z01, u, t):
+        ghat, _ = ota_round_jax(params, grads, h, z01, use_kernel=use_kernel)
+        return ghat, float(params.dim)
+
+    return JaxAggregator(name=name, is_ota=True, round_fn=round_fn)
+
+
+def _vanilla_ota(agg: "B.VanillaOTA", use_kernel: bool) -> JaxAggregator:
+    dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
+    root_des = np.sqrt(dim * e_s)
+    root_n0 = np.sqrt(n0)
+
+    def round_fn(grads, h, z01, u, t):
+        n = grads.shape[0]
+        gamma_t = root_des * jnp.min(jnp.abs(h)) / g_max
+        acc = gamma_t * jnp.sum(grads, axis=0)
+        ghat = ops.ota_combine_with_noise(acc, n * gamma_t, root_n0 * z01,
+                                          use_kernel=use_kernel)
+        return ghat, float(dim)
+
+    return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
+
+
+def _opc_ota_comp(agg: "B.OPCOTAComp", use_kernel: bool) -> JaxAggregator:
+    dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
+    n_grid = agg.n_grid
+    b_bar = np.sqrt(dim * e_s) / g_max
+    root_n0 = np.sqrt(n0)
+
+    def round_fn(grads, h, z01, u, t):
+        habs = jnp.abs(h)
+        n = grads.shape[0]
+        lo = jnp.maximum((b_bar * jnp.min(habs)) ** 2 * 1e-4, 1e-300)
+        hi = (b_bar * jnp.max(habs)) ** 2 * 1e4
+        etas = jnp.geomspace(lo, hi, n_grid)                       # (n_grid,)
+        b = jnp.minimum(b_bar, jnp.sqrt(etas)[:, None] / habs)     # (n_grid,N)
+        c = b * habs / jnp.sqrt(etas)[:, None]
+        mses = (g_max ** 2 * jnp.sum((c - 1.0) ** 2, axis=1) / n ** 2
+                + dim * n0 / (n ** 2 * etas))
+        eta = etas[jnp.argmin(mses)]
+        b_t = jnp.minimum(b_bar, jnp.sqrt(eta) / habs)
+        acc = (b_t * habs) @ grads
+        ghat = ops.ota_combine_with_noise(acc, n * jnp.sqrt(eta),
+                                          root_n0 * z01,
+                                          use_kernel=use_kernel)
+        return ghat, float(dim)
+
+    return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
+
+
+def _proposed_digital(params, name: str, use_kernel: bool) -> JaxAggregator:
+    rhos = np.asarray(params.rhos)
+
+    def round_fn(grads, h, z01, u, t):
+        ghat, _, latency = digital_round_jax(params, grads, h, u,
+                                             use_kernel=use_kernel)
+        return ghat, latency
+
+    return JaxAggregator(name=name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True,
+                         dither_mask_np=lambda habs: habs >= rhos[None, :])
+
+
+def as_functional(agg, use_kernel: bool = True) -> Optional[JaxAggregator]:
+    """Functional port of a NumPy ``Aggregator`` instance, or None when the
+    scheme has no JAX port yet (the trainer then falls back to NumPy).
+
+    Ports are memoized on the aggregator instance so repeated runs (e.g.
+    the benchmarks' step-size grid search) share compiled scans.
+    """
+    if isinstance(agg, JaxAggregator):
+        return agg
+    cache = agg.__dict__.setdefault("_jax_ports", {})
+    if use_kernel in cache:
+        return cache[use_kernel]
+    port = None
+    if isinstance(agg, B.IdealFedAvg):
+        port = _ideal_fedavg()
+    elif isinstance(agg, (B.ProposedOTA, B.LCPCOTAComp)):
+        port = _from_ota_params(agg.params, agg.name, use_kernel)
+    elif isinstance(agg, B.VanillaOTA):
+        port = _vanilla_ota(agg, use_kernel)
+    elif isinstance(agg, B.OPCOTAComp):
+        port = _opc_ota_comp(agg, use_kernel)
+    elif isinstance(agg, B.ProposedDigital):
+        port = _proposed_digital(agg.params, agg.name, use_kernel)
+    cache[use_kernel] = port
+    return port
+
+
+# ----------------------------------------------------------------- engine
+
+def _project(w, radius):
+    nrm = jnp.linalg.norm(w)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-300))
+    return w * scale
+
+
+class FLEngine:
+    """vmap(lax.scan) Monte-Carlo FL simulator (same protocol as FLTrainer).
+
+    One jitted call runs all trials of all rounds: fading/noise/dither come
+    in as batched (trials, T, ...) tensors, rounds advance under a two-level
+    ``lax.scan`` (outer: eval segments, inner: rounds) so only the model
+    states at eval points are materialized, and trials are batched with
+    ``vmap`` — including through the Pallas epilogue kernels.
+    """
+
+    def __init__(self, task, dataset, deployment: Deployment, eta: float, *,
+                 project_radius: Optional[float] = None,
+                 use_kernel: bool = True):
+        self.task = task
+        self.ds = dataset
+        self.dep = deployment
+        self.eta = eta
+        self.project_radius = project_radius
+        self.use_kernel = use_kernel
+        self.xs = np.stack([d.x for d in dataset.devices]).astype(np.float32)
+        self.ys = np.stack([d.y for d in dataset.devices]).astype(np.int32)
+        self.x_all = np.concatenate(
+            [d.x for d in dataset.devices]).astype(np.float32)
+        self.y_all = np.concatenate(
+            [d.y for d in dataset.devices]).astype(np.int32)
+        self.x_test = np.asarray(dataset.x_test, np.float32)
+        self.y_test = np.asarray(dataset.y_test, np.int32)
+        # built once so repeated run() calls hit the jit cache
+        self._loss_v = jax.jit(jax.vmap(task.loss_fn, in_axes=(0, None, None)))
+        self._acc_v = jax.jit(jax.vmap(task.accuracy_fn,
+                                       in_axes=(0, None, None)))
+
+    # ------------------------------------------------ randomness replay
+
+    def _dither_block(self, jagg: JaxAggregator, habs: np.ndarray,
+                      seed: int, trial: int, d: int) -> np.ndarray:
+        """(T, N, d) dither uniforms replaying the trainer's stream: one
+        uniform(d) per participating device per round, in (t, m) order."""
+        T, N = habs.shape
+        mask = jagg.dither_mask_np(habs)
+        rng = np.random.default_rng((seed, trial, 17))
+        u = np.zeros((T, N, d))
+        for t in range(T):
+            for m in range(N):
+                if mask[t, m]:
+                    u[t, m] = rng.uniform(size=d)
+        return u
+
+    # ------------------------------------------------------- scan runner
+
+    def _get_runner(self, jagg: JaxAggregator, trials: int, n_seg: int,
+                    eval_every: int):
+        d, N = self.task.dim, self.dep.n_devices
+        # the task object itself keys (and pins) the gradient function;
+        # everything else closed over by trial_fn is shape-static, and all
+        # run-varying scalars (eta, radius, lat_scale) are traced arguments
+        key = (self.task, trials, n_seg, eval_every, d, N,
+               self.xs.shape, self.use_kernel)
+        if key in jagg._runner_cache:
+            return jagg._runner_cache[key]
+
+        grads_fn = self.task.device_grads_fn
+        round_fn = jagg.round_fn
+
+        def trial_fn(w0, eta, radius, lat_scale, xs, ys, H, Z, U, Ts):
+            # H: (n_seg, eval_every, N) complex; Z: (n_seg, eval_every, dz);
+            # U: (n_seg, eval_every, Nu, du); Ts: (n_seg, eval_every)
+            def step(carry, inp):
+                w, t_wall = carry
+                h, z, u, t = inp
+                g = grads_fn(w.astype(jnp.float32), xs, ys
+                             ).astype(jnp.float64)
+                ghat, lat = round_fn(g, h, z, u, t)
+                w_new = _project(w - eta * ghat, radius)
+                return (w_new, t_wall + lat * lat_scale), None
+
+            def segment(carry, seg_inp):
+                out, _ = jax.lax.scan(step, carry, seg_inp)
+                return out, out
+
+            carry0 = (w0, jnp.zeros((), jnp.float64))
+            _, (ws, walls) = jax.lax.scan(segment, carry0, (H, Z, U, Ts))
+            ws = jnp.concatenate([w0[None], ws], axis=0)          # (E, d)
+            walls = jnp.concatenate([jnp.zeros((1,)), walls], axis=0)
+            return ws, walls
+
+        runner = jax.jit(jax.vmap(
+            trial_fn,
+            in_axes=(None, None, None, None, None, None, 0, 0, 0, None)))
+        jagg._runner_cache[key] = runner
+        return runner
+
+    # --------------------------------------------------------------- run
+
+    def run(self, aggregator, *, rounds: int, trials: int = 3,
+            eval_every: int = 10, seed: int = 0,
+            w_star: Optional[np.ndarray] = None) -> TrainLog:
+        jagg = as_functional(aggregator, use_kernel=self.use_kernel)
+        if jagg is None:
+            raise ValueError(
+                f"no JAX port for {type(aggregator).__name__}; "
+                "use FLTrainer.run(..., backend='numpy')")
+        eval_rounds = list(range(0, rounds + 1, eval_every))
+        n_seg = len(eval_rounds) - 1
+        T = n_seg * eval_every      # rounds past the last eval are unobserved
+        d, N = self.task.dim, self.dep.n_devices
+
+        H = np.stack([sample_fading_batch(self.dep.lambdas,
+                                          seed * 1000 + tr, T)
+                      for tr in range(trials)])               # (trials, T, N)
+        if jagg.needs_noise:
+            Z = np.stack([np.random.default_rng((seed, tr, 17))
+                          .standard_normal((T, d)) for tr in range(trials)])
+        else:
+            Z = np.zeros((trials, T, 1))
+        if jagg.needs_dither:
+            U = np.stack([self._dither_block(jagg, np.abs(H[tr]), seed, tr, d)
+                          for tr in range(trials)])
+        else:
+            U = np.zeros((trials, T, 1, 1))
+
+        with enable_x64():
+            runner = self._get_runner(jagg, trials, n_seg, eval_every)
+            w0 = jnp.asarray(self.task.init_params(), jnp.float64)
+            eta = jnp.asarray(self.eta, jnp.float64)
+            radius = jnp.asarray(
+                np.inf if self.project_radius is None else self.project_radius,
+                jnp.float64)
+            lat_scale = jnp.asarray(
+                1.0 / self.dep.cfg.bandwidth_hz if jagg.is_ota else 1.0,
+                jnp.float64)
+            seg = lambda a: jnp.asarray(a).reshape(
+                (trials, n_seg, eval_every) + a.shape[2:])
+            Ts = jnp.arange(T).reshape(n_seg, eval_every)
+            ws, walls = runner(w0, eta, radius, lat_scale,
+                               jnp.asarray(self.xs), jnp.asarray(self.ys),
+                               seg(H), seg(Z), seg(U), Ts)
+            losses, accs = self._evaluate(ws)
+            opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
+                       if w_star is not None else None)
+        return TrainLog(scheme=jagg.name,
+                        rounds=np.asarray(eval_rounds, dtype=np.int64),
+                        wall_time_s=np.asarray(walls).mean(axis=0),
+                        global_loss=np.asarray(losses, np.float64),
+                        accuracy=np.asarray(accs, np.float64),
+                        opt_error=opt_err)
+
+    def _evaluate(self, ws):
+        """Global loss + test accuracy at every eval point, vmapped over
+        (trials * E) model states in the trainer's float32 eval precision."""
+        trials, E, d = ws.shape
+        wf = ws.reshape(trials * E, d).astype(jnp.float32)
+        losses = self._loss_v(wf, self.x_all, self.y_all)
+        accs = self._acc_v(wf, self.x_test, self.y_test)
+        return (np.asarray(losses).reshape(trials, E),
+                np.asarray(accs).reshape(trials, E))

@@ -72,6 +72,21 @@ class SoftmaxRegressionTask:
     def init_params(self, seed: int = 0) -> np.ndarray:
         return np.zeros(self.dim, dtype=np.float64)
 
+    @property
+    def loss_fn(self):
+        """Jitted pure loss (w32, x, y) -> scalar, for jit/vmap composition."""
+        return self._loss
+
+    @property
+    def accuracy_fn(self):
+        """Jitted pure accuracy (w32, x, y) -> scalar."""
+        return self._acc
+
+    @property
+    def device_grads_fn(self):
+        """Jitted vmapped per-device clipped gradient (w32, xs, ys) -> (N,d)."""
+        return self._device_grads
+
     def device_grads(self, w, xs, ys):
         """xs: (N, n, feat), ys: (N, n) stacked device batches."""
         g = self._device_grads(jnp.asarray(w, jnp.float32),
@@ -151,6 +166,21 @@ class MLPTask:
         w[self.n_features * self.hidden + self.hidden:
           self.n_features * self.hidden + self.hidden + w2.shape[0]] = w2
         return w
+
+    @property
+    def loss_fn(self):
+        """Jitted pure loss (w32, x, y) -> scalar, for jit/vmap composition."""
+        return self._loss
+
+    @property
+    def accuracy_fn(self):
+        """Jitted pure accuracy (w32, x, y) -> scalar."""
+        return self._acc
+
+    @property
+    def device_grads_fn(self):
+        """Jitted vmapped per-device clipped gradient (w32, xs, ys) -> (N,d)."""
+        return self._device_grads
 
     def device_grads(self, w, xs, ys):
         g = self._device_grads(jnp.asarray(w, jnp.float32),

@@ -47,6 +47,7 @@ class FLTrainer:
         self.eta = eta
         self.project_radius = project_radius
         self.batch_size = batch_size
+        self._engine = None
         # stack device data once (full-batch path): (N, n, feat)
         if batch_size is None:
             self.xs = np.stack([d.x for d in dataset.devices])
@@ -63,7 +64,38 @@ class FLTrainer:
     def run(self, aggregator: Aggregator, *, rounds: int, trials: int = 3,
             eval_every: int = 10, seed: int = 0,
             w_star: Optional[np.ndarray] = None,
-            time_budget_s: Optional[float] = None) -> TrainLog:
+            time_budget_s: Optional[float] = None,
+            backend: str = "auto") -> TrainLog:
+        """Run the Monte-Carlo FL protocol.
+
+        backend: "numpy" — reference Python-loop path; "jax" — vectorized
+        vmap/scan engine (``fl.engine``), errors if the scheme/options have
+        no JAX port; "auto" (default) — the engine when supported (full
+        batch, no time budget, ported scheme), NumPy otherwise. Both
+        backends replay the same random streams, so trajectories agree to
+        ~1e-5 (tests/test_engine_parity.py).
+        """
+        if backend not in ("auto", "jax", "numpy"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend != "numpy":
+            from .engine import FLEngine, as_functional
+            supported = (self.batch_size is None and time_budget_s is None
+                         and as_functional(aggregator) is not None)
+            if supported:
+                if (self._engine is None
+                        or self._engine.eta != self.eta
+                        or self._engine.project_radius != self.project_radius):
+                    self._engine = FLEngine(
+                        self.task, self.ds, self.dep, self.eta,
+                        project_radius=self.project_radius)
+                return self._engine.run(aggregator, rounds=rounds,
+                                        trials=trials, eval_every=eval_every,
+                                        seed=seed, w_star=w_star)
+            if backend == "jax":
+                raise ValueError(
+                    f"backend='jax' unsupported here: scheme "
+                    f"{type(aggregator).__name__} has no JAX port, or "
+                    "mini-batching/time budgets are in use")
         eval_rounds = list(range(0, rounds + 1, eval_every))
         losses = np.zeros((trials, len(eval_rounds)))
         accs = np.zeros((trials, len(eval_rounds)))
@@ -89,13 +121,18 @@ class FLTrainer:
                     ei += 1
                 if t == rounds or (time_budget_s is not None
                                    and t_wall >= time_budget_s):
-                    # freeze remaining evals at the current model (budget hit)
+                    # budget hit / horizon reached: freeze remaining evals
+                    # at the last *written* eval. The t=0 eval always runs
+                    # before the first budget check, so ei >= 1 here and
+                    # slot ei-1 is never stale/unwritten.
+                    assert ei > 0, "freeze before any eval was written"
+                    last = ei - 1
                     for j in range(ei, len(eval_rounds)):
-                        losses[trial, j] = losses[trial, ei - 1]
-                        accs[trial, j] = accs[trial, ei - 1]
+                        losses[trial, j] = losses[trial, last]
+                        accs[trial, j] = accs[trial, last]
                         wall[trial, j] = t_wall
                         if opt_err is not None:
-                            opt_err[trial, j] = opt_err[trial, ei - 1]
+                            opt_err[trial, j] = opt_err[trial, last]
                     break
                 if self.batch_size is None:
                     xs, ys = self.xs, self.ys

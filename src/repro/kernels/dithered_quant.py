@@ -37,24 +37,59 @@ def _kernel(scal_ref, g_ref, u_ref, o_ref):
     o_ref[...] = jnp.where(delta > 0, out, jnp.zeros_like(g))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def dithered_quantize_2d(g2d: jnp.ndarray, u2d: jnp.ndarray,
                          m: jnp.ndarray, levels: jnp.ndarray,
-                         interpret: bool = False) -> jnp.ndarray:
-    """g2d/u2d: (R, 128) with R % BLOCK_ROWS == 0; m/levels scalars."""
+                         interpret: bool = False,
+                         block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """g2d/u2d: (R, 128) with R % block_rows == 0; m/levels scalars."""
     R = g2d.shape[0]
     scal = jnp.stack([m.astype(g2d.dtype),
                       levels.astype(g2d.dtype)]).reshape(1, 2)
-    grid = (R // BLOCK_ROWS,)
+    grid = (R // block_rows,)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 2), lambda i: (0, 0)),          # scalars
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(g2d.shape, g2d.dtype),
+        interpret=interpret,
+    )(scal, g2d, u2d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def dithered_quantize_rows_2d(g2d: jnp.ndarray, u2d: jnp.ndarray,
+                              scal: jnp.ndarray,
+                              interpret: bool = False,
+                              block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """Batched variant: N independent tensors quantized in one launch.
+
+    g2d/u2d: (N*R_dev, LANES) — device i owns rows [i*R_dev, (i+1)*R_dev);
+    scal: (N, 2) per-device (m_i = ||g_i||_inf, levels_i = 2^{r_i} - 1).
+    Grid walks (device, row-block); each block reads its device's scalar
+    row. This is the FL engine's digital uplink: all N devices' payloads
+    compress in a single fused pass instead of N kernel launches per round.
+    """
+    NR = g2d.shape[0]
+    n_dev = scal.shape[0]
+    r_dev = NR // n_dev
+    blocks_per_dev = r_dev // block_rows
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_dev, blocks_per_dev),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (i, 0)),       # device scalars
+            pl.BlockSpec((block_rows, LANES),
+                         lambda i, j, b=blocks_per_dev: (i * b + j, 0)),
+            pl.BlockSpec((block_rows, LANES),
+                         lambda i, j, b=blocks_per_dev: (i * b + j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES),
+                               lambda i, j, b=blocks_per_dev: (i * b + j, 0)),
         out_shape=jax.ShapeDtypeStruct(g2d.shape, g2d.dtype),
         interpret=interpret,
     )(scal, g2d, u2d)

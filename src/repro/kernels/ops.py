@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .dithered_quant import dithered_quantize_2d, BLOCK_ROWS, LANES
+from .dithered_quant import (dithered_quantize_2d, dithered_quantize_rows_2d,
+                             BLOCK_ROWS, LANES)
 from .ota_combine import ota_combine_2d
 from .linear_scan import linear_scan_fsl, CHUNK
 
@@ -19,10 +20,24 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _to_blocks(x: jnp.ndarray):
-    """Flatten + zero-pad to (R, LANES) with R % BLOCK_ROWS == 0."""
+def _fit_block_rows(n: int) -> int:
+    """Row-tile for an n-element payload: full BLOCK_ROWS for large tensors,
+    the next power of two >= the row count for small ones (interpret-mode
+    cost scales with the padded block, so a d=7850 gradient should not pay
+    for a 512x128 tile)."""
+    rows = -(-n // LANES)
+    if rows >= BLOCK_ROWS:
+        return BLOCK_ROWS
+    br = 8
+    while br < rows:
+        br *= 2
+    return br
+
+
+def _to_blocks(x: jnp.ndarray, block_rows: int = BLOCK_ROWS):
+    """Flatten + zero-pad to (R, LANES) with R % block_rows == 0."""
     n = x.size
-    per = BLOCK_ROWS * LANES
+    per = block_rows * LANES
     n_pad = (-n) % per
     flat = jnp.pad(x.reshape(-1), (0, n_pad))
     return flat.reshape(-1, LANES), n
@@ -40,9 +55,78 @@ def dithered_quantize(g: jnp.ndarray, levels: jnp.ndarray, key: jax.Array,
     levels = jnp.asarray(levels, g.dtype)
     if not use_kernel:
         return ref.dithered_quantize_ref(g, m, levels, dither)
-    g2d, n = _to_blocks(g)
-    u2d, _ = _to_blocks(dither)
-    out = dithered_quantize_2d(g2d, u2d, m, levels, interpret=_on_cpu())
+    br = _fit_block_rows(g.size)
+    g2d, n = _to_blocks(g, br)
+    u2d, _ = _to_blocks(dither, br)
+    out = dithered_quantize_2d(g2d, u2d, m, levels, interpret=_on_cpu(),
+                               block_rows=br)
+    return _from_blocks(out, n, g.shape, g.dtype)
+
+
+def dithered_quantize_with_dither(g: jnp.ndarray, levels: jnp.ndarray,
+                                  dither: jnp.ndarray,
+                                  *, use_kernel: bool = True) -> jnp.ndarray:
+    """Quantize-dequantize with an explicit dither operand (g's shape).
+
+    Used by the FL engine, which replays the NumPy trainer's dither stream
+    for bit-parity instead of drawing from a jax PRNG key.
+    """
+    m = jnp.max(jnp.abs(g)).astype(g.dtype)
+    levels = jnp.asarray(levels, g.dtype)
+    dither = dither.astype(g.dtype)
+    if not use_kernel:
+        return ref.dithered_quantize_ref(g, m, levels, dither)
+    br = _fit_block_rows(g.size)
+    g2d, n = _to_blocks(g, br)
+    u2d, _ = _to_blocks(dither, br)
+    out = dithered_quantize_2d(g2d, u2d, m, levels, interpret=_on_cpu(),
+                               block_rows=br)
+    return _from_blocks(out, n, g.shape, g.dtype)
+
+
+def dithered_quantize_batch(gs: jnp.ndarray, levels: jnp.ndarray,
+                            dither: jnp.ndarray,
+                            *, use_kernel: bool = True) -> jnp.ndarray:
+    """Quantize N independent tensors (rows of ``gs``) in one fused launch.
+
+    gs/dither: (N, d); levels: (N,) per-device 2^{r_m} - 1. Each row is
+    normalized by its own ||g_m||_inf — the digital-FL uplink where every
+    device compresses with its offline-designed bit-width (Sec. II-B).
+    """
+    m = jnp.max(jnp.abs(gs), axis=1).astype(gs.dtype)
+    levels = jnp.asarray(levels, gs.dtype)
+    dither = dither.astype(gs.dtype)
+    if not use_kernel:
+        return jax.vmap(ref.dithered_quantize_ref)(gs, m, levels, dither)
+    n_dev, d = gs.shape
+    br = _fit_block_rows(d)
+    per = br * LANES
+    d_pad = (-d) % per
+    pad = lambda x: jnp.pad(x, ((0, 0), (0, d_pad))).reshape(-1, LANES)
+    scal = jnp.stack([m, levels], axis=1)
+    out = dithered_quantize_rows_2d(pad(gs), pad(dither), scal,
+                                    interpret=_on_cpu(), block_rows=br)
+    return out.reshape(n_dev, d + d_pad)[:, :d]
+
+
+def ota_combine_with_noise(g: jnp.ndarray, alpha: jnp.ndarray,
+                           noise: jnp.ndarray,
+                           *, use_kernel: bool = True) -> jnp.ndarray:
+    """ghat = (g + noise)/alpha with an explicit AWGN operand (eq. (6)).
+
+    ``alpha`` may be a traced per-round scalar (e.g. Vanilla OTA's n*gamma_t).
+    The kernel consumes pre-scaled noise, so this computes
+    g*inv_alpha + noise*inv_alpha (1-ulp from the reference (g+z)/alpha).
+    """
+    inv_alpha = (1.0 / jnp.asarray(alpha)).astype(g.dtype)
+    z = noise.astype(g.dtype) * inv_alpha
+    if not use_kernel:
+        return ref.ota_combine_ref(g, inv_alpha, z)
+    br = _fit_block_rows(g.size)
+    g2d, n = _to_blocks(g, br)
+    z2d, _ = _to_blocks(z, br)
+    out = ota_combine_2d(g2d, z2d, inv_alpha, interpret=_on_cpu(),
+                         block_rows=br)
     return _from_blocks(out, n, g.shape, g.dtype)
 
 
@@ -54,9 +138,11 @@ def ota_combine(g: jnp.ndarray, alpha: jnp.ndarray, noise_scale: jnp.ndarray,
          * jax.random.normal(key, g.shape, jnp.float32)).astype(g.dtype)
     if not use_kernel:
         return ref.ota_combine_ref(g, inv_alpha, z)
-    g2d, n = _to_blocks(g)
-    z2d, _ = _to_blocks(z)
-    out = ota_combine_2d(g2d, z2d, inv_alpha, interpret=_on_cpu())
+    br = _fit_block_rows(g.size)
+    g2d, n = _to_blocks(g, br)
+    z2d, _ = _to_blocks(z, br)
+    out = ota_combine_2d(g2d, z2d, inv_alpha, interpret=_on_cpu(),
+                         block_rows=br)
     return _from_blocks(out, n, g.shape, g.dtype)
 
 

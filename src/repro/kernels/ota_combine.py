@@ -22,22 +22,27 @@ def _kernel(scal_ref, g_ref, z_ref, o_ref):
     o_ref[...] = g_ref[...] * inv_alpha + z_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def ota_combine_2d(g2d: jnp.ndarray, z2d: jnp.ndarray,
                    inv_alpha: jnp.ndarray,
-                   interpret: bool = False) -> jnp.ndarray:
-    """g2d/z2d: (R,128), R % BLOCK_ROWS == 0; z pre-scaled noise."""
+                   interpret: bool = False,
+                   block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """g2d/z2d: (R,128), R % block_rows == 0; z pre-scaled noise.
+
+    ``block_rows`` tiles the grid; small tensors should pass a small tile
+    (interpret-mode cost scales with the padded block, not the payload).
+    """
     R = g2d.shape[0]
     scal = inv_alpha.astype(g2d.dtype).reshape(1, 1)
     return pl.pallas_call(
         _kernel,
-        grid=(R // BLOCK_ROWS,),
+        grid=(R // block_rows,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(g2d.shape, g2d.dtype),
         interpret=interpret,
     )(scal, g2d, z2d)

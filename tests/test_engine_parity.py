@@ -1,0 +1,229 @@
+"""NumPy-trainer vs JAX-engine parity: same seed -> same trajectories.
+
+The engine (fl/engine.py) replays the NumPy trainer's random streams —
+fading, PS AWGN, quantization dither — so the two backends must agree
+per eval point to (r/a)tol 1e-5 on loss, accuracy, opt-error, and
+wall-clock, for every ported scheme. This is the contract that lets
+``FLTrainer.run(backend="auto")`` route through the engine without
+changing any benchmark's numbers.
+"""
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core import digital_design, ota_design
+from repro.core.bounds import ObjectiveWeights
+from repro.core.channel import WirelessConfig, make_deployment
+from repro.data.loader import FLDataset
+from repro.data.partition import partition_by_class
+from repro.data.synthetic import SyntheticSpec, make_classification_dataset
+from repro.fl.engine import FLEngine, as_functional
+from repro.fl.tasks import SoftmaxRegressionTask
+from repro.fl.trainer import FLTrainer, solve_w_star
+
+N_DEVICES = 10
+ROUNDS = 40
+TRIALS = 2
+EVAL_EVERY = 10
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = SyntheticSpec(n_train_per_class=100, n_test_per_class=30,
+                         noise_sigma=1.5)
+    x_tr, y_tr, x_te, y_te = make_classification_dataset(spec)
+    shards = partition_by_class(x_tr, y_tr, N_DEVICES, 1, 100, seed=3)
+    ds = FLDataset.from_shards(shards, x_te, y_te)
+    task = SoftmaxRegressionTask(n_features=784, mu=0.01, g_max=20.0)
+    dep = make_deployment(WirelessConfig(n_devices=N_DEVICES, seed=1))
+    eta = 0.5 / (task.mu + task.smooth_l)
+    x_all = np.concatenate([d.x for d in ds.devices])
+    y_all = np.concatenate([d.y for d in ds.devices])
+    w_star = solve_w_star(task, x_all, y_all, iters=600)
+    return task, ds, dep, eta, w_star
+
+
+@pytest.fixture(scope="module")
+def ota_params(setup):
+    task, ds, dep, eta, _ = setup
+    w = ObjectiveWeights.strongly_convex(eta=eta, mu=task.mu, kappa_sc=3.0,
+                                         n=N_DEVICES)
+    spec = ota_design.OTADesignSpec(
+        lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
+        e_s=dep.cfg.energy_per_symbol, n0=dep.cfg.noise_power, weights=w)
+    params, _ = ota_design.design_ota_sca(spec, n_iters=3)
+    return params
+
+
+@pytest.fixture(scope="module")
+def dig_params(setup):
+    task, ds, dep, eta, _ = setup
+    w = ObjectiveWeights.strongly_convex(eta=eta, mu=task.mu, kappa_sc=3.0,
+                                         n=N_DEVICES)
+    spec = digital_design.DigitalDesignSpec(
+        lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
+        e_s=dep.cfg.energy_per_symbol, n0=dep.cfg.noise_power,
+        bandwidth_hz=dep.cfg.bandwidth_hz, t_max_s=0.2, weights=w)
+    params, _ = digital_design.design_digital_sca(spec, n_iters=2)
+    return params
+
+
+def _assert_logs_match(log_np, log_jx):
+    assert log_np.scheme == log_jx.scheme
+    np.testing.assert_array_equal(log_np.rounds, log_jx.rounds)
+    np.testing.assert_allclose(log_jx.global_loss, log_np.global_loss, **TOL)
+    np.testing.assert_allclose(log_jx.accuracy, log_np.accuracy, **TOL)
+    np.testing.assert_allclose(np.asarray(log_jx.wall_time_s),
+                               np.asarray(log_np.wall_time_s), **TOL)
+    if log_np.opt_error is not None:
+        np.testing.assert_allclose(log_jx.opt_error, log_np.opt_error, **TOL)
+
+
+def _run_both(setup, agg, w_star=None):
+    task, ds, dep, eta, _ = setup
+    tr = FLTrainer(task, ds, dep, eta=eta)
+    log_np = tr.run(agg, rounds=ROUNDS, trials=TRIALS, eval_every=EVAL_EVERY,
+                    seed=5, w_star=w_star, backend="numpy")
+    log_jx = tr.run(agg, rounds=ROUNDS, trials=TRIALS, eval_every=EVAL_EVERY,
+                    seed=5, w_star=w_star, backend="jax")
+    return log_np, log_jx
+
+
+class TestTrajectoryParity:
+    def test_ideal_fedavg(self, setup):
+        _assert_logs_match(*_run_both(setup, B.IdealFedAvg()))
+
+    def test_proposed_ota(self, setup, ota_params):
+        _, _, dep, eta, w_star = setup
+        log_np, log_jx = _run_both(setup, B.ProposedOTA(ota_params),
+                                   w_star=w_star)
+        _assert_logs_match(log_np, log_jx)
+        assert log_jx.opt_error is not None
+
+    def test_vanilla_ota(self, setup):
+        task, _, dep, _, w_star = setup
+        agg = B.VanillaOTA(task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                           dep.cfg.noise_power)
+        _assert_logs_match(*_run_both(setup, agg, w_star=w_star))
+
+    def test_opc_ota_comp(self, setup):
+        task, _, dep, _, _ = setup
+        agg = B.OPCOTAComp(task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                           dep.cfg.noise_power)
+        _assert_logs_match(*_run_both(setup, agg))
+
+    def test_lcpc_ota_comp(self, setup):
+        task, _, dep, _, _ = setup
+        agg = B.LCPCOTAComp(dep, task.dim, task.g_max,
+                            dep.cfg.energy_per_symbol, dep.cfg.noise_power)
+        _assert_logs_match(*_run_both(setup, agg))
+
+    def test_proposed_digital(self, setup, dig_params):
+        _, _, _, _, w_star = setup
+        log_np, log_jx = _run_both(setup, B.ProposedDigital(dig_params),
+                                   w_star=w_star)
+        _assert_logs_match(log_np, log_jx)
+        # digital wall-clock is the realized TDMA latency, not d/B: it must
+        # vary with participation yet match across backends (checked above)
+        assert np.all(np.diff(np.asarray(log_jx.wall_time_s)) > 0)
+
+
+class TestBackendDispatch:
+    def test_auto_uses_engine_for_ported_schemes(self, setup):
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2, seed=0)
+        assert tr._engine is not None
+
+    def test_auto_falls_back_for_unported_schemes(self, setup):
+        task, ds, dep, eta, _ = setup
+        agg = B.BBFLInterior(dep, task.dim, task.g_max,
+                             dep.cfg.energy_per_symbol, dep.cfg.noise_power)
+        assert as_functional(agg) is None
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        log = tr.run(agg, rounds=4, trials=1, eval_every=2, seed=0)
+        assert tr._engine is None
+        assert np.all(np.isfinite(log.global_loss))
+
+    def test_jax_backend_rejects_unsupported(self, setup):
+        task, ds, dep, eta, _ = setup
+        agg = B.BBFLInterior(dep, task.dim, task.g_max,
+                             dep.cfg.energy_per_symbol, dep.cfg.noise_power)
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        with pytest.raises(ValueError, match="no JAX port"):
+            tr.run(agg, rounds=4, trials=1, eval_every=2, backend="jax")
+        with pytest.raises(ValueError, match="backend"):
+            tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
+                   backend="nope")
+
+    def test_engine_rejects_unported_aggregator(self, setup):
+        task, ds, dep, eta, _ = setup
+        eng = FLEngine(task, ds, dep, eta)
+        agg = B.BBFLInterior(dep, task.dim, task.g_max,
+                             dep.cfg.energy_per_symbol, dep.cfg.noise_power)
+        with pytest.raises(ValueError, match="no JAX port"):
+            eng.run(agg, rounds=4, trials=1, eval_every=2)
+
+    def test_non_divisible_rounds(self, setup, ota_params):
+        """rounds not a multiple of eval_every: evals stop at the last grid
+        point in both backends."""
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        agg = B.ProposedOTA(ota_params)
+        log_np = tr.run(agg, rounds=25, trials=1, eval_every=10, seed=7,
+                        backend="numpy")
+        log_jx = tr.run(agg, rounds=25, trials=1, eval_every=10, seed=7,
+                        backend="jax")
+        assert list(log_np.rounds) == [0, 10, 20]
+        _assert_logs_match(log_np, log_jx)
+
+    def test_shared_aggregator_across_deployments(self, setup):
+        """One aggregator instance run through trainers on *different*
+        deployments must not reuse a stale compiled runner (latency scale
+        is per-deployment): wall-clock must track each bandwidth."""
+        import dataclasses
+
+        task, ds, dep, eta, _ = setup
+        agg = B.VanillaOTA(task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                           dep.cfg.noise_power)
+        dep_fast = make_deployment(
+            dataclasses.replace(dep.cfg, bandwidth_hz=dep.cfg.bandwidth_hz
+                                * 10), seed=1)
+        walls = {}
+        for name, d in (("slow", dep), ("fast", dep_fast)):
+            tr = FLTrainer(task, ds, d, eta=eta)
+            lj = tr.run(agg, rounds=4, trials=1, eval_every=2, seed=1,
+                        backend="jax")
+            ln = tr.run(agg, rounds=4, trials=1, eval_every=2, seed=1,
+                        backend="numpy")
+            np.testing.assert_allclose(np.asarray(lj.wall_time_s),
+                                       np.asarray(ln.wall_time_s), **TOL)
+            walls[name] = np.asarray(lj.wall_time_s)[-1]
+        np.testing.assert_allclose(walls["fast"], walls["slow"] / 10,
+                                   rtol=1e-12)
+
+    def test_trainer_eta_mutation_rebuilds_engine(self, setup):
+        """Mutating trainer.eta after a run must be honored by the JAX
+        backend too (the engine is rebuilt, not served stale)."""
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2, seed=1)
+        tr.eta = eta / 10
+        lj = tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
+                    seed=1, backend="jax")
+        ln = tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
+                    seed=1, backend="numpy")
+        np.testing.assert_allclose(lj.global_loss, ln.global_loss, **TOL)
+
+    def test_eval_every_exceeds_rounds(self, setup):
+        """rounds < eval_every: a single t=0 eval, zero scan segments (the
+        empty fading-batch regression)."""
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        log_np = tr.run(B.IdealFedAvg(), rounds=3, trials=1, eval_every=10,
+                        seed=7, backend="numpy")
+        log_jx = tr.run(B.IdealFedAvg(), rounds=3, trials=1, eval_every=10,
+                        seed=7, backend="jax")
+        assert list(log_jx.rounds) == [0]
+        _assert_logs_match(log_np, log_jx)

@@ -109,6 +109,96 @@ def test_selective_scan_matches_ref(B, S, D, n):
     np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=3e-5)
 
 
+ODD_DIMS = [1, 127, 1000, 7850, 65537]   # none divisible by BLOCK_ROWS*LANES
+
+
+@pytest.mark.parametrize("d", ODD_DIMS)
+def test_ota_combine_with_noise_padding(d):
+    """Explicit-noise epilogue (engine hot path): pad-and-slice wrapper must
+    match the jnp oracle for gradient dims not divisible by a block."""
+    g = jax.random.normal(jax.random.key(d), (d,))
+    z = jax.random.normal(jax.random.key(d + 1), (d,))
+    out_k = ops.ota_combine_with_noise(g, jnp.asarray(2.5), z, use_kernel=True)
+    out_r = ops.ota_combine_with_noise(g, jnp.asarray(2.5), z, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_k), (np.asarray(g)
+                               + np.asarray(z)) / 2.5, atol=1e-5)
+
+
+def test_ota_combine_with_noise_float64_and_traced_alpha():
+    """The engine runs the epilogue in f64 under scoped x64, with per-round
+    traced post-scalers (Vanilla OTA); both must survive the kernel."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        g = jnp.asarray(np.random.default_rng(0).normal(size=777))
+        z = jnp.asarray(np.random.default_rng(1).normal(size=777))
+        assert g.dtype == jnp.float64
+
+        @jax.jit
+        def f(alpha):
+            return ops.ota_combine_with_noise(g, alpha, z, use_kernel=True)
+
+        out = f(jnp.asarray(3.0))
+        assert out.dtype == jnp.float64
+        np.testing.assert_allclose(np.asarray(out),
+                                   (np.asarray(g) + np.asarray(z)) / 3.0,
+                                   atol=1e-12)
+
+
+@pytest.mark.parametrize("d", ODD_DIMS)
+def test_dithered_quantize_with_dither_padding(d):
+    """Explicit-dither quantizer vs the numpy reference on odd dims: same
+    dither stream -> same payload (up to 1-ulp rounding)."""
+    from repro.core.quantize import quantize_np
+
+    class _FixedU:
+        def __init__(self, u):
+            self.u = u
+
+        def uniform(self, size=None):
+            return self.u
+
+    rng = np.random.default_rng(d)
+    g = rng.normal(size=d)
+    u = rng.uniform(size=d)
+    out_k = ops.dithered_quantize_with_dither(
+        jnp.asarray(g, jnp.float32), 63.0, jnp.asarray(u, jnp.float32))
+    out_r = ops.dithered_quantize_with_dither(
+        jnp.asarray(g, jnp.float32), 63.0, jnp.asarray(u, jnp.float32),
+        use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-6)
+    # vs the numpy simulation quantizer: compare in f64 (the engine's
+    # precision) — an f32 kernel pass would see ~1e-5 of stochastic-rounding
+    # boundary flips against the f64 reference, which is expected
+    from jax.experimental import enable_x64
+    with enable_x64():
+        out64 = ops.dithered_quantize_with_dither(
+            jnp.asarray(g), 63.0, jnp.asarray(u))
+    q_np = quantize_np(g, 6, _FixedU(u))
+    np.testing.assert_allclose(np.asarray(out64), q_np, atol=1e-12)
+
+
+@pytest.mark.parametrize("n_dev,d", [(1, 130), (5, 127), (10, 7850),
+                                     (3, 65537)])
+def test_dithered_quantize_batch_matches_per_device(n_dev, d):
+    """Batched rows-kernel == N independent per-device quantize calls, with
+    heterogeneous per-device bit-widths (digital engine hot path)."""
+    rng = np.random.default_rng(7)
+    gs = jnp.asarray(rng.normal(size=(n_dev, d)) * (1 + np.arange(n_dev))[:, None],
+                     jnp.float32)
+    us = jnp.asarray(rng.uniform(size=(n_dev, d)), jnp.float32)
+    levels = jnp.asarray([float(2 ** (1 + (i % 6)) - 1) for i in range(n_dev)],
+                         jnp.float32)
+    out_b = ops.dithered_quantize_batch(gs, levels, us, use_kernel=True)
+    assert out_b.shape == (n_dev, d)
+    for i in range(n_dev):
+        out_i = ops.dithered_quantize_with_dither(gs[i], levels[i], us[i],
+                                                  use_kernel=True)
+        np.testing.assert_allclose(np.asarray(out_b[i]), np.asarray(out_i),
+                                   atol=1e-6)
+
+
 def test_mamba_kernel_flag_matches_jnp():
     """mamba_apply with the Pallas kernel == fused jnp path."""
     from repro.configs import REGISTRY

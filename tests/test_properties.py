@@ -2,6 +2,12 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dep: property tests need hypothesis; the rest of the "
+           "suite must collect without it")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 
