@@ -150,21 +150,26 @@ def design_digital(task, dep, eta, *, kappa_sc: float = 3.0,
 
 
 def run_tuned(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
-              seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1)):
+              seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1),
+              backend="auto"):
     """Per-scheme step-size grid search (paper Sec. V: 'step sizes for all
-    schemes are tuned via a small grid search'), then the full MC run."""
+    schemes are tuned via a small grid search'), then the full MC run.
+
+    ``backend="auto"`` routes every scheme through the JAX engine (all 14
+    baselines have ports) unless a time budget forces the NumPy loop.
+    """
     best_eta, best_acc = None, -1.0
     for frac in etas:
         tr = FLTrainer(task, ds, dep, eta=frac * eta_max)
         probe = tr.run(agg, rounds=rounds, trials=1,
                        eval_every=max(rounds // 4, 1), seed=seed + 91,
-                       time_budget_s=time_budget_s)
+                       time_budget_s=time_budget_s, backend=backend)
         acc = float(probe.accuracy[:, -2:].mean())   # 2-pt avg vs MC noise
         if acc > best_acc:
             best_acc, best_eta = acc, frac * eta_max
     tr = FLTrainer(task, ds, dep, eta=best_eta)
     log = tr.run(agg, rounds=rounds, trials=trials, eval_every=eval_every,
-                 seed=seed, time_budget_s=time_budget_s)
+                 seed=seed, time_budget_s=time_budget_s, backend=backend)
     return log, best_eta
 
 

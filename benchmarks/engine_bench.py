@@ -3,16 +3,27 @@
 Runs the same Monte-Carlo FL workload through both ``FLTrainer`` backends —
 the Python-loop NumPy reference and the vmap/scan JAX engine (Pallas
 epilogue kernels, interpret mode on CPU) — and reports wall-clock plus the
-steady-state speedup. Both backends replay identical random streams, so the
-max trajectory deviation is recorded as a built-in parity check.
+steady-state speedup, for the OTA schemes AND the digital selection suite
+(top-K / bit-allocation schemes run as jittable ops since the full-coverage
+port). Both backends replay identical random streams, so the max trajectory
+deviation is recorded as a built-in parity check.
 
     PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
 
 Writes experiments/results/engine_bench.json.
+
+``--digital-long`` runs the 1500-round digital horizon through the engine
+alone and records wall-clock + peak RSS — the O(N*d) streaming-dither
+memory proof (the retired (trials, T, N, d) dither tensor would add
+trials*T*N*d*8 bytes on top). ``--rss-budget-mb`` turns it into a CI guard
+(exit 1 on budget overrun; used by scripts/verify.sh). Writes
+experiments/results/engine_bench_digital.json.
 """
 from __future__ import annotations
 
 import argparse
+import resource
+import sys
 import time
 
 import numpy as np
@@ -34,7 +45,8 @@ def _time_backend(trainer, agg, backend, *, rounds, trials, eval_every,
 
 
 def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
-        rounds: int = 200, samples_per_device: int = 1000):
+        rounds: int = 200, samples_per_device: int = 1000,
+        result_name: str = "engine_bench"):
     """Benchmark entry (also wired into benchmarks.run).
 
     Defaults are a fig2-sized run: N=20 devices, 3 Monte-Carlo trials, 200
@@ -53,14 +65,19 @@ def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
     dig_params, _ = design_digital(task, dep, eta)
     trainer = FLTrainer(task, ds, dep, eta=eta)
 
-    suite = [
+    cfg = dep.cfg
+    wargs = (task.dim, task.g_max, cfg.energy_per_symbol, cfg.noise_power)
+    dig_rounds = max(rounds // 4, 1)   # NumPy quantize loop dominates; keep
+    suite = [                          # the digital horizons laptop-sized
         ("proposed_ota", B.ProposedOTA(params), rounds),
-        ("vanilla_ota", B.VanillaOTA(task.dim, task.g_max,
-                                     dep.cfg.energy_per_symbol,
-                                     dep.cfg.noise_power), rounds),
-        # digital replays one (T, N, d) dither tensor per trial; keep its
-        # horizon shorter so the benchmark stays laptop-sized
-        ("proposed_digital", B.ProposedDigital(dig_params), max(rounds // 4, 1)),
+        ("vanilla_ota", B.VanillaOTA(*wargs), rounds),
+        ("opc_ota_fl", B.OPCOTAFL(*wargs), rounds),
+        ("bbfl_alternative", B.BBFLAlternative(dep, *wargs), rounds),
+        ("proposed_digital", B.ProposedDigital(dig_params), dig_rounds),
+        ("best_channel", B.BestChannel(dep, *wargs, cfg.bandwidth_hz),
+         dig_rounds),
+        ("uqos", B.UQOS(dep, *wargs, cfg.bandwidth_hz), dig_rounds),
+        ("fedtoe", B.FedTOE(dep, *wargs, cfg.bandwidth_hz), dig_rounds),
     ]
     # warm the task's jitted grad/loss functions once so the NumPy timing
     # measures the backend, not shared first-call compilation
@@ -90,18 +107,84 @@ def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
                      t_warm * 1e6 / max(t_rounds * trials, 1),
                      f"speedup={res['speedup_warm']:.1f}x;parity={dev:.1e}"))
     payload = {"quick": quick, "results": results}
-    save_result("engine_bench", payload)
+    save_result(result_name, payload)
     return rows, payload
+
+
+def run_digital_long(*, rounds: int = 1500, trials: int = 1,
+                     n_devices: int = 20, eval_every: int = 100):
+    """1500-round digital horizon, engine-only, with the peak-RSS record.
+
+    The engine streams dither from scan-carried keys (O(N*d) per round);
+    this run is infeasible at the old materialized-dither design, whose
+    (trials, T, N, d) tensor alone would add ``dither_tensor_mb`` on top of
+    the measured peak.
+    """
+    task, ds, dep, eta_max = make_sc_setup(
+        n_devices, samples_per_device=1000,
+        n_train_per_class=max(n_devices * 100, 200))
+    eta = 0.25 * eta_max
+    dig_params, _ = design_digital(task, dep, eta)
+    trainer = FLTrainer(task, ds, dep, eta=eta)
+    results = []
+    for key, agg in (("proposed_digital", B.ProposedDigital(dig_params)),
+                     ("fedtoe", B.FedTOE(dep, task.dim, task.g_max,
+                                         dep.cfg.energy_per_symbol,
+                                         dep.cfg.noise_power,
+                                         dep.cfg.bandwidth_hz))):
+        t0 = time.perf_counter()
+        log = trainer.run(agg, rounds=rounds, trials=trials,
+                          eval_every=eval_every, seed=5, backend="jax")
+        elapsed = time.perf_counter() - t0
+        results.append({
+            "scheme": agg.name, "key": key, "rounds": rounds,
+            "trials": trials, "n_devices": n_devices, "dim": task.dim,
+            "jax_s": elapsed,
+            "rounds_per_s": rounds * trials / elapsed,
+            "final_loss": float(log.global_loss[:, -1].mean()),
+            "final_acc": float(log.accuracy[:, -1].mean()),
+        })
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    dither_tensor_mb = trials * rounds * n_devices * task.dim * 8 / 2 ** 20
+    payload = {
+        "results": results,
+        "peak_rss_mb": peak_rss_mb,
+        "retired_dither_tensor_mb": dither_tensor_mb,
+        "streamed_dither_mb_per_round": n_devices * task.dim * 4 / 2 ** 20,
+    }
+    save_result("engine_bench_digital", payload)
+    return payload
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI (N=10, 2 trials, 40 rounds)")
+    ap.add_argument("--digital-long", action="store_true",
+                    help="1500-round digital engine run + peak-RSS record")
+    ap.add_argument("--rss-budget-mb", type=float, default=None,
+                    help="with --digital-long: exit 1 if peak RSS exceeds")
     args = ap.parse_args()
+    if args.digital_long:
+        payload = run_digital_long()
+        for r in payload["results"]:
+            print(f"{r['key']}: {r['rounds']}x{r['trials']} rounds in "
+                  f"{r['jax_s']:.1f}s ({r['rounds_per_s']:.0f} rounds/s)")
+        print(f"peak RSS {payload['peak_rss_mb']:.0f} MB (retired dither "
+              f"tensor alone: {payload['retired_dither_tensor_mb']:.0f} MB)")
+        if (args.rss_budget_mb is not None
+                and payload["peak_rss_mb"] > args.rss_budget_mb):
+            print(f"FAIL: peak RSS exceeds budget {args.rss_budget_mb:.0f} MB"
+                  " — is the dither replay materialized again?",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
     if args.smoke:
+        # smoke records separately so CI never clobbers the fig2-sized
+        # engine_bench.json artifact
         rows, payload = run(quick=True, n_devices=10, trials=2, rounds=40,
-                            samples_per_device=100)
+                            samples_per_device=100,
+                            result_name="engine_bench_smoke")
     else:
         rows, payload = run(quick=True)
     print("scheme,backend=numpy[s],jax_cold[s],jax_warm[s],speedup,parity")

@@ -29,9 +29,13 @@ def run(quick: bool = True, n_devices: int = 10):
     etas = (1.0, 0.5) if quick else (1.5, 1.0, 0.5, 0.25)
     for agg in suite:
         t1 = time.time()
+        # backend="auto": the MLPTask fig3 sweep runs through the JAX
+        # engine for every scheme (generic vmap grad path; parity pinned
+        # by tests/test_engine_parity.py::test_mlp_task_parity)
         log, best_eta = run_tuned(task, ds, dep, agg, eta_max=eta_max,
                                   rounds=rounds, trials=trials,
-                                  eval_every=10, seed=9, etas=etas)
+                                  eval_every=10, seed=9, etas=etas,
+                                  backend="auto")
         d = log_to_dict(log)
         d["eta"] = best_eta
         logs.append(d)

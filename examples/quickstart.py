@@ -7,12 +7,20 @@ compares against zero-bias Vanilla OTA-FL and the noiseless ideal.
     PYTHONPATH=src python examples/quickstart.py
 
 Backends: ``FLTrainer.run(..., backend=...)`` selects the simulation
-engine. "numpy" is the reference Python-loop oracle; "jax" runs the
-vectorized vmap/scan engine (``repro.fl.engine``) whose PS epilogue and
-quantizer go through the Pallas kernels; "auto" (default) picks the engine
-whenever the scheme has a JAX port and falls back to NumPy otherwise.
-Both replay identical random streams, so the trajectories match to ~1e-5 —
-the engine is just much faster at Monte-Carlo scale.
+engine. Both replay identical random streams, so the trajectories match to
+~1e-5 — the engine is just much faster at Monte-Carlo scale.
+
+    backend   | what runs                          | covers
+    ----------+------------------------------------+---------------------
+    "numpy"   | reference Python-loop oracle       | every scheme + all
+              | (core/baselines.py)                | trainer options
+    "jax"     | vmap/scan engine (fl/engine.py);   | all 14 paper schemes
+              | Pallas epilogue/quantizer/scoring  | (OTA + digital);
+              | kernels; streaming counter-based   | full batch, no time
+              | dither (O(N*d)/round)              | budget
+    "auto"    | the engine whenever the scheme has | everything (falls
+    (default) | a registered port and the options  | back to NumPy
+              | allow it                           | otherwise)
 """
 import numpy as np
 

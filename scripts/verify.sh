@@ -1,31 +1,34 @@
 #!/usr/bin/env bash
-# Repo verification: tier-1 tests + engine benchmark smoke.
+# Repo verification: tier-1 tests + engine benchmark smoke + memory guard.
 #
 #   ./scripts/verify.sh          # or: make verify
 #
 # Mirrors ROADMAP.md's tier-1 command, then smoke-runs the NumPy-vs-JAX
-# engine benchmark (records experiments/results/engine_bench.json).
+# engine benchmark (records experiments/results/engine_bench.json) and the
+# 1500-round digital engine horizon under a fixed peak-RSS budget — the
+# streaming-dither O(N*d) memory contract (a rematerialized
+# (trials, T, N, d) dither tensor would blow the budget by ~1.9 GB).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
-# --deselect: multi-device failures known-red since the seed (see
-# ROADMAP.md "Known-red"); verify gates *new* breakage
-python -m pytest -q \
-    --deselect tests/test_distributed.py::TestHLOCost::test_scan_trip_counts \
-    --deselect tests/test_distributed.py::TestMultiDevice::test_train_step_aggregators \
-    --deselect tests/test_distributed.py::TestMultiDevice::test_ota_collective_matches_simulation \
-    --deselect tests/test_distributed.py::TestMultiDevice::test_decode_step_multidevice
+python -m pytest -q
 test_status=$?
 
 echo "== engine benchmark (smoke) =="
 python -m benchmarks.engine_bench --smoke
 bench_status=$?
 
-if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ]; then
-    echo "verify FAILED (tests=$test_status bench=$bench_status)" >&2
+echo "== digital engine 1500-round horizon (peak-RSS guard) =="
+python -m benchmarks.engine_bench --digital-long --rss-budget-mb 2048
+mem_status=$?
+
+if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
+        || [ "$mem_status" -ne 0 ]; then
+    echo "verify FAILED (tests=$test_status bench=$bench_status" \
+         "mem=$mem_status)" >&2
     exit 1
 fi
 echo "verify OK"

@@ -1,0 +1,54 @@
+"""Version-compat shims over the moving jax sharding API.
+
+The production code targets the current explicit-sharding surface
+(``jax.shard_map`` with ``axis_names``/``check_vma``, meshes built with
+``jax.sharding.AxisType``). Pinned containers may carry an older jax
+(<= 0.4.x) where ``shard_map`` lives in ``jax.experimental`` (with
+``check_rep``/``auto`` instead) and meshes have no axis types. These
+helpers pick whichever API exists at import time so the launch/step/engine
+layers and the multi-device tests run on both.
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_auto_mesh(shape, axes):
+    """Mesh with every axis in Auto mode (the pre-AxisType default)."""
+    if HAS_AXIS_TYPES:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name):
+    """Size of a manual mesh axis from inside shard_map.
+
+    ``jax.lax.axis_size`` is newer than 0.4.x; ``psum(1, axis)`` is the
+    classic spelling (folded to a constant for a static operand).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, mesh, in_specs, out_specs, manual_axes):
+    """shard_map with ``manual_axes`` manual and the rest automatic.
+
+    New jax: ``jax.shard_map(..., axis_names=set(manual_axes),
+    check_vma=False)``. Old jax: ``jax.experimental.shard_map.shard_map(...,
+    auto=<other axes>, check_rep=False)`` — the same partial-auto semantics
+    under the previous parameter names.
+    """
+    if HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, auto=auto)

@@ -41,7 +41,7 @@ import numpy as np
 from .channel import Deployment
 from .digital import DigitalParams, digital_round
 from .ota import OTAParams, ota_round, uniform_gamma_min_variance
-from .quantize import payload_bits, quantize_np
+from .quantize import payload_bits, quantize_np, quantize_np_dither
 
 
 @dataclasses.dataclass
@@ -59,7 +59,16 @@ class Aggregator:
     is_ota: bool = True
 
     def round(self, grads: Sequence[np.ndarray], h: np.ndarray, t: int,
-              rng: np.random.Generator) -> RoundResult:
+              rng: np.random.Generator,
+              dither: Optional[np.ndarray] = None) -> RoundResult:
+        """One uplink round.
+
+        ``dither``: optional (N, d) counter-based dither uniforms for this
+        round (see ``core.rngstream``); the FL trainer always supplies it
+        for digital schemes so the JAX engine can replay the stream. OTA
+        schemes ignore it. When None, digital schemes fall back to drawing
+        dither sequentially from ``rng`` (standalone/back-compat use).
+        """
         raise NotImplementedError
 
 
@@ -68,7 +77,7 @@ class Aggregator:
 class IdealFedAvg(Aggregator):
     name = "Ideal FedAvg"
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         g = np.mean(np.stack([np.asarray(g) for g in grads]), axis=0)
         return RoundResult(g, 0.0, np.ones(len(grads)), {})
 
@@ -80,7 +89,7 @@ class ProposedOTA(Aggregator):
         self.params = params
         self.name = label
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         ghat, chi = ota_round(self.params, grads, h, rng)
         d = self.params.dim
         # concurrent analog upload: tau = d/B symbols (Sec. II-A), charged
@@ -98,7 +107,7 @@ class VanillaOTA(Aggregator):
     def __init__(self, dim: int, g_max: float, e_s: float, n0: float):
         self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         n = len(grads)
         gamma_t = np.sqrt(self.dim * self.e_s) * float(np.min(np.abs(h))) / self.g_max
         acc = gamma_t * np.sum(np.stack([np.asarray(g) for g in grads]), axis=0)
@@ -127,7 +136,7 @@ class OPCOTAComp(Aggregator):
         return (self.g_max ** 2 * np.sum((c - 1.0) ** 2) / n ** 2
                 + self.dim * self.n0 / (n ** 2 * eta))
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         habs = np.abs(h)
         n = len(grads)
         b_bar = np.sqrt(self.dim * self.e_s) / self.g_max
@@ -164,7 +173,7 @@ class LCPCOTAComp(Aggregator):
                                 g_max=g_max, dim=dim, energy_per_symbol=e_s,
                                 noise_psd=n0)
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         ghat, chi = ota_round(self.params, grads, h, rng)
         return RoundResult(ghat, float(self.params.dim), chi, {})
 
@@ -179,7 +188,7 @@ class OPCOTAFL(Aggregator):
     def __init__(self, dim: int, g_max: float, e_s: float, n0: float):
         self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         habs = np.abs(h)
         n = len(grads)
         order = np.argsort(habs)[::-1]
@@ -216,7 +225,7 @@ class BBFLInterior(Aggregator):
         self.gamma = uniform_gamma_min_variance(lam_in, dim, e_s, g_max, n0)
         self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         n = len(grads)
         tau = self.g_max * self.gamma / np.sqrt(self.dim * self.e_s)
         chi = (np.abs(h) >= tau) & self.interior
@@ -246,7 +255,7 @@ class BBFLAlternative(Aggregator):
             deployment.lambdas, dim, e_s, g_max, n0)
         self.dim, self.g_max, self.e_s, self.n0 = dim, g_max, e_s, n0
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         if t % 2 == 1:
             return self.interior_agg.round(grads, h, t, rng)
         n = len(grads)
@@ -277,8 +286,9 @@ class ProposedDigital(Aggregator):
         self.params = params
         self.name = label
 
-    def round(self, grads, h, t, rng):
-        ghat, chi, latency = digital_round(self.params, grads, h, rng)
+    def round(self, grads, h, t, rng, dither=None):
+        ghat, chi, latency = digital_round(self.params, grads, h, rng,
+                                           dither=dither)
         return RoundResult(ghat, latency, chi, {})
 
 
@@ -291,14 +301,16 @@ class _DigitalBase(Aggregator):
         self.dim, self.g_max = dim, g_max
         self.e_s, self.n0, self.B = e_s, n0, bandwidth_hz
 
-    def _upload(self, grads, sel, bits, habs, rng):
+    def _upload(self, grads, sel, bits, habs, rng, dither=None):
         """Quantize+send the selected set; returns (sum of g^q, latency)."""
         rate = _capacity_rate(habs, self.e_s, self.n0)
         acc = np.zeros(self.dim)
         latency = 0.0
         for m in sel:
             r = int(bits[m]) if np.ndim(bits) else int(bits)
-            gq = quantize_np(np.asarray(grads[m], dtype=np.float64), r, rng)
+            g64 = np.asarray(grads[m], dtype=np.float64)
+            gq = (quantize_np(g64, r, rng) if dither is None
+                  else quantize_np_dither(g64, r, dither[m]))
             acc += gq
             latency += payload_bits(self.dim, r) / (self.B * max(rate[m], 1e-9))
         return acc, latency
@@ -313,10 +325,11 @@ class BestChannel(_DigitalBase):
         self.k, self.r = k, r_bits
         self.name = "Best Channel"
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         habs = np.abs(h)
         sel = np.argsort(habs)[::-1][:self.k]
-        acc, latency = self._upload(grads, sel, self.r, habs, rng)
+        acc, latency = self._upload(grads, sel, self.r, habs, rng,
+                                    dither=dither)
         chi = np.zeros(len(grads))
         chi[sel] = 1.0
         return RoundResult(acc / self.k, latency, chi, {})
@@ -331,7 +344,7 @@ class BestChannelNorm(_DigitalBase):
         self.k, self.kp, self.r_total = k, k_prime, r_total
         self.name = "Best Channel-Norm"
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         habs = np.abs(h)
         cand = np.argsort(habs)[::-1][:self.kp]
         norms = np.array([np.linalg.norm(grads[m]) for m in cand])
@@ -340,7 +353,8 @@ class BestChannelNorm(_DigitalBase):
         share = sel_norms / max(np.sum(sel_norms), 1e-12)
         bits = np.zeros(len(grads), dtype=np.int64)
         bits[sel] = np.maximum(1, np.round(self.r_total * share)).astype(np.int64)
-        acc, latency = self._upload(grads, sel, bits, habs, rng)
+        acc, latency = self._upload(grads, sel, bits, habs, rng,
+                                    dither=dither)
         chi = np.zeros(len(grads))
         chi[sel] = 1.0
         return RoundResult(acc / self.k, latency, chi, {})
@@ -355,10 +369,11 @@ class PropFairness(_DigitalBase):
         self.k, self.r = k, r_bits
         self.name = "Proportional Fairness"
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         score = np.abs(h) ** 2 / self.dep.lambdas
         sel = np.argsort(score)[::-1][:self.k]
-        acc, latency = self._upload(grads, sel, self.r, np.abs(h), rng)
+        acc, latency = self._upload(grads, sel, self.r, np.abs(h), rng,
+                                    dither=dither)
         chi = np.zeros(len(grads))
         chi[sel] = 1.0
         return RoundResult(acc / self.k, latency, chi, {})
@@ -389,7 +404,7 @@ class UQOS(_DigitalBase):
         self.pi = np.clip(pi, 1e-6, 1.0)
         self.name = "UQOS"
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         n = len(grads)
         # sample K without replacement with inclusion ∝ pi (systematic)
         order = rng.permutation(n)
@@ -401,7 +416,9 @@ class UQOS(_DigitalBase):
         acc = np.zeros(self.dim)
         latency = 0.0
         for m in active:
-            gq = quantize_np(np.asarray(grads[m], dtype=np.float64), self.r, rng)
+            g64 = np.asarray(grads[m], dtype=np.float64)
+            gq = (quantize_np(g64, self.r, rng) if dither is None
+                  else quantize_np_dither(g64, self.r, dither[m]))
             acc += gq / (n * self.pi[m] * self.p_succ[m])   # unbiased reweight
             latency += payload_bits(self.dim, self.r) / (self.B * self.rate)
         chi = np.zeros(n)
@@ -419,7 +436,7 @@ class QML(_DigitalBase):
         self.k, self.var_cap, self.r_max = k, var_cap, r_max
         self.name = "QML"
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         n = len(grads)
         sel = rng.choice(n, size=self.k, replace=False)
         # smallest r with d*G^2/(2^r-1)^2 <= var_cap  (per-device cap)
@@ -427,7 +444,8 @@ class QML(_DigitalBase):
         while (self.dim * self.g_max ** 2 / (2.0 ** r - 1.0) ** 2
                > self.var_cap and r < self.r_max):
             r += 1
-        acc, latency = self._upload(grads, sel, r, np.abs(h), rng)
+        acc, latency = self._upload(grads, sel, r, np.abs(h), rng,
+                                    dither=dither)
         chi = np.zeros(n)
         chi[sel] = 1.0
         return RoundResult(acc / self.k, latency, chi, {"r": r})
@@ -484,7 +502,7 @@ class FedTOE(_DigitalBase):
                 break
         return bits
 
-    def round(self, grads, h, t, rng):
+    def round(self, grads, h, t, rng, dither=None):
         n = len(grads)
         sel = rng.choice(n, size=self.k, replace=False)
         bits = self._alloc_bits(sel)
@@ -496,8 +514,9 @@ class FedTOE(_DigitalBase):
         for m in bits:
             latency += payload_bits(self.dim, bits[m]) / (self.B * max(self.rates[m], 1e-9))
             if habs[m] >= self.thr[m]:        # no outage
-                gq = quantize_np(np.asarray(grads[m], dtype=np.float64),
-                                 bits[m], rng)
+                g64 = np.asarray(grads[m], dtype=np.float64)
+                gq = (quantize_np(g64, bits[m], rng) if dither is None
+                      else quantize_np_dither(g64, bits[m], dither[m]))
                 acc += gq / (k_sched * (1.0 - self.p_out))
                 chi[m] = 1.0
         return RoundResult(acc, latency, chi, {})

@@ -23,7 +23,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .quantize import payload_bits, quantize_np
+from .quantize import payload_bits, quantize_np, quantize_np_dither
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,9 +82,15 @@ def lemma2_variance(params: DigitalParams, lambdas: np.ndarray,
 
 
 def digital_round(params: DigitalParams, grads: Sequence[np.ndarray],
-                  h: np.ndarray, rng: np.random.Generator
+                  h: np.ndarray, rng: np.random.Generator,
+                  dither: Optional[np.ndarray] = None
                   ) -> tuple[np.ndarray, np.ndarray, float]:
     """One digital-FL uplink round (simulation path).
+
+    ``dither``: optional (N, d) per-device dither uniforms (the trainer
+    passes the counter-based ``core.rngstream`` block so the JAX engine can
+    replay the stream per round); when None, dither is drawn sequentially
+    from ``rng`` as in standalone use.
 
     Returns (ghat, chi, latency_s): PS estimate (eq. (10)), participation
     indicators, and the realized round latency (sum over participating
@@ -98,7 +104,11 @@ def digital_round(params: DigitalParams, grads: Sequence[np.ndarray],
     latency = 0.0
     for m, g in enumerate(grads):
         if chi[m]:
-            gq = quantize_np(np.asarray(g, dtype=np.float64), int(params.r_bits[m]), rng)
+            g64 = np.asarray(g, dtype=np.float64)
+            if dither is None:
+                gq = quantize_np(g64, int(params.r_bits[m]), rng)
+            else:
+                gq = quantize_np_dither(g64, int(params.r_bits[m]), dither[m])
             acc += gq / params.nus[m]
             latency += payloads[m] / (params.bandwidth_hz * rates[m])
     return acc, chi, float(latency)
@@ -138,3 +148,99 @@ def digital_round_jax(params: DigitalParams, grads, h, u,
     acc = (chi / jnp.asarray(params.nus)) @ gq
     latency = jnp.sum(chi * lat_m)
     return acc, chi, latency
+
+
+# ----------------------------------------- jittable selection primitives
+#
+# The digital baseline suite (Sec. V-A-2) is built from three reusable
+# jit/vmap/scan-able pieces: instantaneous capacity rates, top-K device
+# selection as a 0/1 mask, and FedTOE's greedy bit allocation. The NumPy
+# oracle implementations live in ``core.baselines``; these mirror them
+# op-for-op so trajectories replay to float64 round-off.
+
+def capacity_rate_jnp(habs, e_s: float, n0: float):
+    """Instantaneous spectral efficiency log2(1 + E_s|h|^2/N0) [b/s/Hz]."""
+    import jax.numpy as jnp
+
+    return jnp.log2(1.0 + e_s * habs ** 2 / n0)
+
+
+def topk_mask(score, k: int):
+    """0/1 mask of the k highest-scoring devices.
+
+    Mirrors the oracle's ``np.argsort(score)[::-1][:k]`` (ties broken by
+    sort order — measure-zero for the continuous channel scores used here).
+    """
+    import jax.numpy as jnp
+
+    n = score.shape[0]
+    order = jnp.argsort(score)[::-1]
+    return jnp.zeros(n, score.dtype).at[order[:k]].set(1.0)
+
+
+def greedy_bit_alloc_jax(sel, rates, *, dim: int, bandwidth_hz: float,
+                         t_budget_s: float, r_max: int):
+    """FedTOE's greedy RB/bit allocation as a jittable scan + while_loop.
+
+    Mirrors ``baselines.FedTOE._alloc_bits``: walk the scheduled set in
+    decreasing-rate order giving each device 1 bit while its minimum
+    payload fits the round budget (``lax.scan``), then greedily grant +1
+    bit to the device with the best variance-reduction-per-latency gain
+    until the budget or ``r_max`` saturates (``lax.while_loop``).
+
+    Args:
+      sel:   (k,) int device indices scheduled this round (replayed draw).
+      rates: (N,) static per-device spectral efficiencies R_m.
+
+    Returns:
+      (bits, in_alloc): (N,) float bit-widths (0 for devices outside the
+      allocation) and the 0/1 allocation mask.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = rates.shape[0]
+    rates = jnp.asarray(rates, jnp.float64)
+    safe_rates = jnp.maximum(rates, 1e-9)
+    # stable descending-rate order over the scheduled set, mirroring
+    # ``sorted(sel, key=lambda m: -rates[m])``
+    order = jnp.argsort(-rates[sel])
+    sel_sorted = sel[order]
+    t_one = (64.0 + dim) / (bandwidth_hz * safe_rates[sel_sorted])
+
+    def fill(used, t1):
+        fits = used + t1 <= t_budget_s
+        return used + jnp.where(fits, t1, 0.0), fits
+
+    _, fits = jax.lax.scan(fill, jnp.zeros((), jnp.float64), t_one)
+    in_alloc = jnp.zeros(n, jnp.float64).at[sel_sorted].add(
+        fits.astype(jnp.float64))
+    bits0 = in_alloc.copy()
+    per_bit_s = dim / (bandwidth_hz * safe_rates)
+
+    def latency(bits):
+        return jnp.sum(in_alloc * (64.0 + dim * bits)
+                       / (bandwidth_hz * safe_rates))
+
+    def cond(state):
+        _, done = state
+        return jnp.logical_not(done)
+
+    def body(state):
+        # under vmap the loop runs until every lane is done, so ``done``
+        # must freeze a lane's state (accept is forced False once done)
+        bits, done = state
+        eligible = (in_alloc > 0) & (bits < r_max)
+        b_safe = jnp.where(in_alloc > 0, bits, 1.0)
+        dv = (1.0 / (2.0 ** b_safe - 1.0) ** 2
+              - 1.0 / (2.0 ** (b_safe + 1.0) - 1.0) ** 2)
+        gain = jnp.where(eligible, dv / per_bit_s, 0.0)
+        best = jnp.argmax(gain)
+        bits_new = bits.at[best].add(1.0)
+        accept = ((gain[best] > 0.0) & (latency(bits_new) <= t_budget_s)
+                  & jnp.logical_not(done))
+        return jnp.where(accept, bits_new, bits), jnp.logical_not(accept)
+
+    bits, _ = jax.lax.while_loop(cond, body,
+                                 (bits0, jnp.sum(in_alloc) == 0))
+    return bits, in_alloc

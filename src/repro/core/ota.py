@@ -150,6 +150,71 @@ def ota_round_jax(params: OTAParams, grads, h, z01, *, use_kernel: bool = True):
     return ghat, chi
 
 
+def opc_ota_fl_round_jax(grads, h, z01, *, dim: int, g_max: float,
+                         e_s: float, n0: float, use_kernel: bool = True):
+    """[20] genie-aided OPC OTA-FL round, pure-JAX (jit/vmap/scan-able).
+
+    Mirrors ``baselines.OPCOTAFL.round``: evaluate the include-k-strongest
+    bias/noise proxy on every k = 1..N threshold candidate at once, pick the
+    first minimizer (matching the oracle's strict-< scan), and aggregate the
+    selected set with the common inversion pre-scaler. The PS epilogue goes
+    through the fused Pallas combine kernel.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    habs = jnp.abs(h)
+    n = habs.shape[0]
+    order = jnp.argsort(habs)[::-1]
+    habs_desc = habs[order]
+    ks = jnp.arange(1, n + 1, dtype=jnp.float64)
+    gammas = np.sqrt(dim * e_s) * habs_desc / g_max
+    scores = (g_max ** 2 * (1.0 - ks / n) ** 2
+              + dim * n0 / (ks * gammas) ** 2)
+    kidx = jnp.argmin(scores)             # first minimum, as the oracle
+    k = (kidx + 1).astype(jnp.float64)
+    gamma = gammas[kidx]
+    chi = jnp.zeros(n, grads.dtype).at[order].set(
+        (jnp.arange(n) <= kidx).astype(grads.dtype))
+    acc = gamma * (chi @ grads)
+    ghat = ops.ota_combine_with_noise(acc, k * gamma,
+                                      np.sqrt(n0) * z01,
+                                      use_kernel=use_kernel)
+    return ghat, chi
+
+
+def bbfl_round_jax(grads, h, z01, t, *, dim: int, g_max: float, e_s: float,
+                   n0: float, gamma_odd: float, mask_odd,
+                   gamma_even: float, mask_even,
+                   use_kernel: bool = True):
+    """[16] broadband analog aggregation round, pure-JAX.
+
+    Covers both BB-FL variants through the round-parity input ``t``:
+    odd rounds use (``gamma_odd``, ``mask_odd``), even rounds
+    (``gamma_even``, ``mask_even``). BB-FL *Interior* passes the same
+    interior policy for both parities; BB-FL *Alternative* passes the
+    all-device policy for even rounds, matching the oracle's ``t % 2``
+    schedule. Truncated inversion inside the scheduled mask, PS divides by
+    ``max(|S_t|, 1) * gamma``.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels import ops
+
+    odd = (t % 2) == 1
+    gamma = jnp.where(odd, gamma_odd, gamma_even)
+    mask = jnp.where(odd, jnp.asarray(mask_odd), jnp.asarray(mask_even))
+    tau = g_max * gamma / np.sqrt(dim * e_s)
+    chi = ((jnp.abs(h) >= tau) & (mask > 0)).astype(grads.dtype)
+    k = jnp.sum(chi)
+    acc = gamma * (chi @ grads)
+    denom = jnp.maximum(k, 1.0) * gamma
+    ghat = ops.ota_combine_with_noise(acc, denom, np.sqrt(n0) * z01,
+                                      use_kernel=use_kernel)
+    return ghat, chi
+
+
 def expected_participation(params: OTAParams, lambdas: np.ndarray) -> np.ndarray:
     """E[chi^A_m] = exp(-tau_m^2/Lambda_m)."""
     return participation_probability(params.thresholds(), lambdas)

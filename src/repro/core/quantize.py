@@ -34,7 +34,26 @@ def _levels(r_bits: int) -> int:
 
 
 def quantize_np(g: np.ndarray, r_bits: int, rng: np.random.Generator) -> np.ndarray:
-    """Dithered stochastic uniform quantization, numpy reference."""
+    """Dithered stochastic uniform quantization, numpy reference.
+
+    Draws the dither from ``rng`` (sequential stream). The FL trainer path
+    instead supplies counter-based dither explicitly via
+    :func:`quantize_np_dither` so the JAX engine can regenerate the same
+    stream per round (see ``core.rngstream``).
+    """
+    g = np.asarray(g, dtype=np.float64)
+    if np.max(np.abs(g)) == 0.0 or r_bits <= 0:
+        return np.zeros_like(g)
+    return quantize_np_dither(g, r_bits, rng.uniform(size=g.shape))
+
+
+def quantize_np_dither(g: np.ndarray, r_bits: int,
+                       u: np.ndarray) -> np.ndarray:
+    """Quantize-dequantize with an explicit dither operand ``u`` (g's shape).
+
+    Same arithmetic as :func:`quantize_np`; ``u`` holds the per-entry
+    stochastic-rounding uniforms, so callers control the dither stream.
+    """
     g = np.asarray(g, dtype=np.float64)
     m = np.max(np.abs(g))
     if m == 0.0 or r_bits <= 0:
@@ -44,7 +63,7 @@ def quantize_np(g: np.ndarray, r_bits: int, rng: np.random.Generator) -> np.ndar
     x = (g + m) / delta                      # in [0, s]
     lo = np.floor(x)
     frac = x - lo
-    up = rng.uniform(size=g.shape) < frac    # stochastic rounding
+    up = np.asarray(u, dtype=np.float64) < frac    # stochastic rounding
     q_idx = np.clip(lo + up, 0, s)
     return -m + delta * q_idx
 

@@ -1,0 +1,95 @@
+"""Counter-based randomness streams shared by both simulation backends.
+
+The original oracle drew quantization dither *sequentially* from the
+per-trial ``np.random.default_rng((seed, trial, 17))`` generator, which
+forced the JAX engine to materialize the whole ``(trials, T, N, d)`` dither
+tensor up front just to replay the stream inside ``lax.scan`` — gigabytes
+for 1500-round digital horizons. Dither is therefore now *counter-based*:
+the value consumed by device ``m`` in round ``t`` of trial ``trial`` is a
+pure function of ``(seed, trial, t)`` computed with the threefry
+``jax.random`` PRNG, identically by
+
+  * the NumPy oracle (eagerly, via :func:`dither_block_np`, one (N, d)
+    block per round), and
+  * the JAX engine (inside the scan, via :func:`dither_block` on a
+    scan-carried per-trial key) — O(N*d) live memory per round.
+
+Threefry is deterministic across CPU/TPU and jit/eager, so the two
+backends see bit-identical dither. Uniforms are drawn in float32 and
+widened to float64 by both consumers (exact), keeping the streams equal
+regardless of the oracle's x64-less default config.
+
+Selection randomness (UQOS' sampling permutation/keys, QML's and FedTOE's
+``rng.choice``) stays on the sequential trial generator — those draws are
+tiny (O(N) per round) and the engine replays them offline with
+:func:`replay_rounds`, feeding the raw draws into the scan as small
+``(T, S)`` inputs.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+#: Stream tag folded into the dither key so it can never collide with other
+#: derived streams of the same (seed, trial).
+DITHER_TAG = 17
+
+
+def dither_base_key(seed: int, trial: int) -> jax.Array:
+    """Per-trial base key for the dither stream (threefry, counter-based)."""
+    key = jax.random.PRNGKey(int(seed) & 0xFFFFFFFF)
+    key = jax.random.fold_in(key, int(trial))
+    return jax.random.fold_in(key, DITHER_TAG)
+
+
+def dither_block(key: jax.Array, t, n: int, d: int) -> jnp.ndarray:
+    """(n, d) float32 dither uniforms for round ``t`` (jit/scan-traceable).
+
+    ``key`` is the trial's :func:`dither_base_key`; ``t`` may be a traced
+    scalar, so the engine folds the round index inside ``lax.scan`` and
+    never stores more than one round's block.
+    """
+    return jax.random.uniform(jax.random.fold_in(key, t), (n, d),
+                              dtype=jnp.float32)
+
+
+def dither_block_np(seed: int, trial: int, t: int, n: int, d: int,
+                    _key_cache: dict = {}) -> np.ndarray:
+    """Oracle view of :func:`dither_block`: (n, d) float64 numpy array.
+
+    The base key is memoized per (seed, trial) so the per-round cost in the
+    Python training loop is one fold_in + uniform dispatch.
+    """
+    ck = (int(seed), int(trial))
+    key = _key_cache.get(ck)
+    if key is None:
+        if len(_key_cache) > 256:
+            _key_cache.clear()
+        key = _key_cache[ck] = dither_base_key(seed, trial)
+    return np.asarray(dither_block(key, t, n, d), dtype=np.float64)
+
+
+def trial_rng(seed: int, trial: int) -> np.random.Generator:
+    """The sequential per-trial generator used by the NumPy trainer."""
+    return np.random.default_rng((seed, trial, 17))
+
+
+def replay_rounds(seed: int, trial: int, rounds: int,
+                  draw_fn: Callable[[np.random.Generator], np.ndarray]
+                  ) -> np.ndarray:
+    """Replay ``rounds`` per-round draws of the oracle's trial generator.
+
+    ``draw_fn(rng)`` must consume *exactly* what the scheme's
+    ``Aggregator.round`` consumes from the trial rng in one round (its
+    selection draws), in the same order, and return them as a flat float64
+    row. Returns the (rounds, S) stack the engine feeds into its scan.
+    """
+    rng = trial_rng(seed, trial)
+    rows = [np.asarray(draw_fn(rng), dtype=np.float64).ravel()
+            for _ in range(rounds)]
+    if not rows:
+        return np.zeros((0, 1))
+    return np.stack(rows)

@@ -1,6 +1,6 @@
 from .tasks import SoftmaxRegressionTask, MLPTask
 from .trainer import FLTrainer, TrainLog
-from .engine import FLEngine, JaxAggregator, as_functional
+from .engine import FLEngine, JaxAggregator, as_functional, register_port
 
 __all__ = ["SoftmaxRegressionTask", "MLPTask", "FLTrainer", "TrainLog",
-           "FLEngine", "JaxAggregator", "as_functional"]
+           "FLEngine", "JaxAggregator", "as_functional", "register_port"]

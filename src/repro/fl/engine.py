@@ -5,32 +5,42 @@ paper's Monte-Carlo protocol with Python-level ``for trial / for t`` loops —
 the reference oracle, but slow. This engine runs the same (trials, rounds)
 recursion of eq. (2)/(13) as ``vmap(lax.scan)`` over a *functional*
 aggregator protocol, with the PS epilogue (post-scale + AWGN, eq. (6))
-dispatched through the fused Pallas kernel ``kernels/ota_combine.py`` and
-the digital payload compressor through ``kernels/dithered_quant.py``
-(interpret mode on CPU, Mosaic on TPU).
+dispatched through the fused Pallas kernel ``kernels/ota_combine.py``, the
+digital payload compressor through ``kernels/dithered_quant.py``, and the
+per-device gradient scoring (norm/quantization-MSE selection) through
+``kernels/row_reduce.py`` (interpret mode on CPU, Mosaic on TPU). Every
+scheme in ``core.baselines`` has a port registered in ``_PORT_FACTORIES``,
+so ``backend="jax"`` covers the paper's full Sec. V comparison suite.
 
-RNG contract — the engine *replays the NumPy trainer's random streams*:
+RNG-replay contract — the engine reproduces the NumPy trainer's random
+streams, so the two backends agree per round to ~1e-5 over hundreds of
+rounds (``tests/test_engine_parity.py``):
 
   * fading: ``channel.sample_fading_batch`` reproduces
     ``FadingProcess(dep, seed*1000 + trial).sample(t)`` bit-for-bit;
   * PS AWGN: every OTA aggregator draws exactly one ``normal(d)`` per round
-    from ``default_rng((seed, trial, 17))``, so one ``standard_normal((T, d))``
-    block per trial replays the stream;
-  * dither: digital aggregators consume one ``uniform(d)`` per *participating*
-    device per round, in device order; participation is a deterministic
-    function of the precomputed fading, so the stream is replayed offline.
+    from the sequential trial rng ``default_rng((seed, trial, 17))``, so one
+    ``standard_normal((T, d))`` block per trial replays the stream;
+  * quantization dither is *counter-based* (``core.rngstream``): the (N, d)
+    uniform block of round ``t`` is a pure threefry function of
+    ``(seed, trial, t)``, generated eagerly by the oracle and regenerated
+    inside the scan from a scan-carried per-trial key — O(N*d) live memory
+    per round, no materialized (trials, T, N, d) tensor, which is what makes
+    1500-round digital horizons feasible;
+  * device-selection draws (UQOS' sampling permutation/keys, QML's and
+    FedTOE's ``rng.choice``) stay on the sequential trial rng; each port's
+    ``sel_stream_np`` replays them offline into a small (T, S) array that
+    rides into the scan alongside the fading.
 
 Model state is carried in float64 (via the scoped x64 context) while local
 gradients/losses are computed in float32 — exactly the NumPy trainer's mixed
-precision — so the two backends agree per round to ~1e-5 over hundreds of
-rounds. ``tests/test_engine_parity.py`` pins this.
+precision. Caveat: dither replay assumes participating gradients are nonzero
+(``quantize_np`` skips its quantization on an exactly-zero gradient, which
+is measure-zero for the paper's tasks).
 
-Caveats: dither replay assumes participating gradients are nonzero
-(``quantize_np`` skips its dither draw on an exactly-zero gradient, which is
-measure-zero for the paper's tasks); and digital schemes materialize the
-full (trials, T, N, d) dither tensor up front — O(trials*T*N*d*8) bytes —
-so very long digital horizons belong on the NumPy backend until the replay
-is chunked per eval segment (see ROADMAP).
+Multi-host scaling: ``FLEngine(..., shard_trials=True)`` lays the
+(embarrassingly parallel) trials axis over all visible devices with
+``shard_map`` — a flag, not a rewrite; trials must divide the device count.
 """
 from __future__ import annotations
 
@@ -43,16 +53,21 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from ..core import baselines as B
+from ..core import rngstream
 from ..core.channel import Deployment, sample_fading_batch
-from ..core.digital import digital_round_jax
-from ..core.ota import ota_round_jax
+from ..core.digital import (capacity_rate_jnp, digital_round_jax,
+                            greedy_bit_alloc_jax, topk_mask)
+from ..core.ota import bbfl_round_jax, opc_ota_fl_round_jax, ota_round_jax
+from ..core.quantize import payload_bits
 from ..kernels import ops
 from .trainer import TrainLog
 
 #: AggregatorFn protocol: (grads (N,d) f64, h (N,) complex, z01 (d,) f64,
-#: u (N,d) f64, t i64) -> (ghat (d,), latency scalar). Latency is in channel
-#: uses for OTA schemes (converted to seconds by the engine via 1/B) and in
-#: seconds for digital schemes, matching ``core.baselines.RoundResult``.
+#: u (N,d) f32 dither, sel (S,) f64 replayed selection draws, t i64) ->
+#: (ghat (d,), latency scalar). Latency is in channel uses for OTA schemes
+#: (converted to seconds by the engine via 1/B) and in seconds for digital
+#: schemes, matching ``core.baselines.RoundResult``. ``t`` carries the round
+#: index for parity-scheduled schemes (BB-FL Alternative's ``t % 2``).
 AggregatorFn = Callable[..., tuple]
 
 
@@ -71,39 +86,64 @@ class JaxAggregator:
     round_fn: AggregatorFn
     needs_noise: bool = True
     needs_dither: bool = False
-    # habs (T, N) -> bool (T, N): which (round, device) slots consume a
-    # dither draw in the NumPy reference (only used when needs_dither)
-    dither_mask_np: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    # (seed, trial, T) -> (T, S) float64 replay of the per-round selection
+    # draws the NumPy scheme consumes from the sequential trial rng (see
+    # core.rngstream.replay_rounds); None when the scheme draws none
+    sel_stream_np: Optional[Callable[[int, int, int], np.ndarray]] = None
     # jitted trial runners keyed on (task id, shapes, schedule); kept on the
     # aggregator so step-size grid searches across trainer instances reuse
     # the compiled scan
     _runner_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
 
-# ------------------------------------------------------- functional ports
+# ------------------------------------------------------------ port registry
 
-def _ideal_fedavg() -> JaxAggregator:
-    def round_fn(grads, h, z01, u, t):
+#: Routing table: NumPy Aggregator type -> functional port factory. The
+#: trainer's backend="auto" consults this (via ``as_functional``) instead of
+#: a hard-coded fallback list; registering a port here is all it takes to
+#: route a new scheme through the engine.
+_PORT_FACTORIES: dict = {}
+
+
+def register_port(cls):
+    def deco(factory):
+        _PORT_FACTORIES[cls] = factory
+        return factory
+    return deco
+
+
+# ------------------------------------------------------- OTA scheme ports
+
+@register_port(B.IdealFedAvg)
+def _ideal_fedavg(agg, use_kernel: bool) -> JaxAggregator:
+    def round_fn(grads, h, z01, u, sel, t):
         return jnp.mean(grads, axis=0), 0.0
 
-    return JaxAggregator(name=B.IdealFedAvg.name, is_ota=True,
+    return JaxAggregator(name=agg.name, is_ota=True,
                          round_fn=round_fn, needs_noise=False)
 
 
-def _from_ota_params(params, name: str, use_kernel: bool) -> JaxAggregator:
-    def round_fn(grads, h, z01, u, t):
+def _from_ota_params(agg, use_kernel: bool) -> JaxAggregator:
+    params = agg.params
+
+    def round_fn(grads, h, z01, u, sel, t):
         ghat, _ = ota_round_jax(params, grads, h, z01, use_kernel=use_kernel)
         return ghat, float(params.dim)
 
-    return JaxAggregator(name=name, is_ota=True, round_fn=round_fn)
+    return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
 
 
+register_port(B.ProposedOTA)(_from_ota_params)
+register_port(B.LCPCOTAComp)(_from_ota_params)
+
+
+@register_port(B.VanillaOTA)
 def _vanilla_ota(agg: "B.VanillaOTA", use_kernel: bool) -> JaxAggregator:
     dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
     root_des = np.sqrt(dim * e_s)
     root_n0 = np.sqrt(n0)
 
-    def round_fn(grads, h, z01, u, t):
+    def round_fn(grads, h, z01, u, sel, t):
         n = grads.shape[0]
         gamma_t = root_des * jnp.min(jnp.abs(h)) / g_max
         acc = gamma_t * jnp.sum(grads, axis=0)
@@ -114,13 +154,14 @@ def _vanilla_ota(agg: "B.VanillaOTA", use_kernel: bool) -> JaxAggregator:
     return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
 
 
+@register_port(B.OPCOTAComp)
 def _opc_ota_comp(agg: "B.OPCOTAComp", use_kernel: bool) -> JaxAggregator:
     dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
     n_grid = agg.n_grid
     b_bar = np.sqrt(dim * e_s) / g_max
     root_n0 = np.sqrt(n0)
 
-    def round_fn(grads, h, z01, u, t):
+    def round_fn(grads, h, z01, u, sel, t):
         habs = jnp.abs(h)
         n = grads.shape[0]
         lo = jnp.maximum((b_bar * jnp.min(habs)) ** 2 * 1e-4, 1e-300)
@@ -141,42 +182,245 @@ def _opc_ota_comp(agg: "B.OPCOTAComp", use_kernel: bool) -> JaxAggregator:
     return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
 
 
-def _proposed_digital(params, name: str, use_kernel: bool) -> JaxAggregator:
-    rhos = np.asarray(params.rhos)
+@register_port(B.OPCOTAFL)
+def _opc_ota_fl(agg: "B.OPCOTAFL", use_kernel: bool) -> JaxAggregator:
+    dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
 
-    def round_fn(grads, h, z01, u, t):
+    def round_fn(grads, h, z01, u, sel, t):
+        ghat, _ = opc_ota_fl_round_jax(grads, h, z01, dim=dim, g_max=g_max,
+                                       e_s=e_s, n0=n0, use_kernel=use_kernel)
+        return ghat, float(dim)
+
+    return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
+
+
+@register_port(B.BBFLInterior)
+def _bbfl_interior(agg: "B.BBFLInterior", use_kernel: bool) -> JaxAggregator:
+    interior = np.asarray(agg.interior, dtype=np.float64)
+    dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
+
+    def round_fn(grads, h, z01, u, sel, t):
+        ghat, _ = bbfl_round_jax(grads, h, z01, t, dim=dim, g_max=g_max,
+                                 e_s=e_s, n0=n0,
+                                 gamma_odd=agg.gamma, mask_odd=interior,
+                                 gamma_even=agg.gamma, mask_even=interior,
+                                 use_kernel=use_kernel)
+        return ghat, float(dim)
+
+    return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
+
+
+@register_port(B.BBFLAlternative)
+def _bbfl_alternative(agg: "B.BBFLAlternative",
+                      use_kernel: bool) -> JaxAggregator:
+    interior = np.asarray(agg.interior_agg.interior, dtype=np.float64)
+    all_mask = np.asarray(agg.all_mask, dtype=np.float64)
+    dim, g_max, e_s, n0 = agg.dim, agg.g_max, agg.e_s, agg.n0
+
+    def round_fn(grads, h, z01, u, sel, t):
+        ghat, _ = bbfl_round_jax(
+            grads, h, z01, t, dim=dim, g_max=g_max, e_s=e_s, n0=n0,
+            gamma_odd=agg.interior_agg.gamma, mask_odd=interior,
+            gamma_even=agg.gamma_all, mask_even=all_mask,
+            use_kernel=use_kernel)
+        return ghat, float(dim)
+
+    return JaxAggregator(name=agg.name, is_ota=True, round_fn=round_fn)
+
+
+# --------------------------------------------------- digital scheme ports
+
+@register_port(B.ProposedDigital)
+def _proposed_digital(agg, use_kernel: bool) -> JaxAggregator:
+    params = agg.params
+
+    def round_fn(grads, h, z01, u, sel, t):
         ghat, _, latency = digital_round_jax(params, grads, h, u,
                                              use_kernel=use_kernel)
         return ghat, latency
 
-    return JaxAggregator(name=name, is_ota=False, round_fn=round_fn,
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True)
+
+
+def _quantized_mean(grads, chi, bits, u, k, use_kernel):
+    """sum_{m in sel} dequant(quant(g_m, r_m)) / k and the payload levels."""
+    levels = chi * (jnp.exp2(bits) - 1.0)
+    gq = ops.dithered_quantize_batch(grads, levels, u, use_kernel=use_kernel)
+    return (chi / k) @ gq
+
+
+@register_port(B.BestChannel)
+def _best_channel(agg: "B.BestChannel", use_kernel: bool) -> JaxAggregator:
+    dim, e_s, n0, bw = agg.dim, agg.e_s, agg.n0, agg.B
+    k, r = agg.k, agg.r
+    payload = float(payload_bits(dim, r))
+
+    def round_fn(grads, h, z01, u, sel, t):
+        habs = jnp.abs(h)
+        chi = topk_mask(habs, k).astype(grads.dtype)
+        rate = capacity_rate_jnp(habs, e_s, n0)
+        lat = jnp.sum(chi * payload / (bw * jnp.maximum(rate, 1e-9)))
+        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel)
+        return acc, lat
+
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True)
+
+
+@register_port(B.BestChannelNorm)
+def _best_channel_norm(agg: "B.BestChannelNorm",
+                       use_kernel: bool) -> JaxAggregator:
+    dim, e_s, n0, bw = agg.dim, agg.e_s, agg.n0, agg.B
+    k, kp, r_total = agg.k, agg.kp, agg.r_total
+
+    def round_fn(grads, h, z01, u, sel, t):
+        habs = jnp.abs(h)
+        cand = topk_mask(habs, kp)
+        # per-device scoring through the fused Pallas row reduction
+        _, sumsq = ops.row_maxabs_sumsq(grads, use_kernel=use_kernel)
+        norms = jnp.sqrt(sumsq)
+        chi = topk_mask(jnp.where(cand > 0, norms, -jnp.inf), k
+                        ).astype(grads.dtype)
+        share = (chi * norms) / jnp.maximum(jnp.sum(chi * norms), 1e-12)
+        bits = chi * jnp.maximum(1.0, jnp.round(r_total * share))
+        rate = capacity_rate_jnp(habs, e_s, n0)
+        lat = jnp.sum(chi * (64.0 + dim * bits)
+                      / (bw * jnp.maximum(rate, 1e-9)))
+        acc = _quantized_mean(grads, chi, bits, u, k, use_kernel)
+        return acc, lat
+
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True)
+
+
+@register_port(B.PropFairness)
+def _prop_fairness(agg: "B.PropFairness", use_kernel: bool) -> JaxAggregator:
+    dim, e_s, n0, bw = agg.dim, agg.e_s, agg.n0, agg.B
+    k, r = agg.k, agg.r
+    lambdas = np.asarray(agg.dep.lambdas)
+    payload = float(payload_bits(dim, r))
+
+    def round_fn(grads, h, z01, u, sel, t):
+        habs = jnp.abs(h)
+        chi = topk_mask(habs ** 2 / lambdas, k).astype(grads.dtype)
+        rate = capacity_rate_jnp(habs, e_s, n0)
+        lat = jnp.sum(chi * payload / (bw * jnp.maximum(rate, 1e-9)))
+        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel)
+        return acc, lat
+
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True)
+
+
+@register_port(B.UQOS)
+def _uqos(agg: "B.UQOS", use_kernel: bool) -> JaxAggregator:
+    dim, e_s, n0, bw = agg.dim, agg.e_s, agg.n0, agg.B
+    k, r, rate_c = agg.k, agg.r, agg.rate
+    pi = np.asarray(agg.pi)
+    p_succ = np.asarray(agg.p_succ)
+    n = pi.shape[0]
+    payload = float(payload_bits(dim, r))
+
+    def sel_stream(seed, trial, T):
+        # per round: sampling permutation + inclusion keys, in draw order
+        def draw(rng):
+            return np.concatenate([rng.permutation(n).astype(np.float64),
+                                   rng.uniform(size=n)])
+        return rngstream.replay_rounds(seed, trial, T, draw)
+
+    def round_fn(grads, h, z01, u, sel, t):
+        order = sel[:n].astype(jnp.int32)
+        keys = sel[n:] ** (1.0 / jnp.asarray(pi)[order])
+        chosen = order[jnp.argsort(keys)[::-1][:k]]
+        cmask = jnp.zeros(n, grads.dtype).at[chosen].set(1.0)
+        habs = jnp.abs(h)
+        snr_ok = capacity_rate_jnp(habs, e_s, n0) >= rate_c
+        active = cmask * snr_ok
+        levels = active * (2.0 ** r - 1.0)
+        gq = ops.dithered_quantize_batch(grads, levels, u,
+                                         use_kernel=use_kernel)
+        acc = (active / (n * pi * p_succ)) @ gq    # unbiased reweight
+        lat = jnp.sum(active) * payload / (bw * rate_c)
+        return acc, lat
+
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
                          needs_noise=False, needs_dither=True,
-                         dither_mask_np=lambda habs: habs >= rhos[None, :])
+                         sel_stream_np=sel_stream)
+
+
+@register_port(B.QML)
+def _qml(agg: "B.QML", use_kernel: bool) -> JaxAggregator:
+    dim, e_s, n0, bw = agg.dim, agg.e_s, agg.n0, agg.B
+    k = agg.k
+    n = agg.dep.n_devices
+    # smallest r meeting the per-device variance cap (static, as the oracle)
+    r = 1
+    while (dim * agg.g_max ** 2 / (2.0 ** r - 1.0) ** 2 > agg.var_cap
+           and r < agg.r_max):
+        r += 1
+    payload = float(payload_bits(dim, r))
+
+    def sel_stream(seed, trial, T):
+        return rngstream.replay_rounds(
+            seed, trial, T, lambda rng: rng.choice(n, size=k, replace=False))
+
+    def round_fn(grads, h, z01, u, sel, t):
+        chi = jnp.zeros(n, grads.dtype).at[sel.astype(jnp.int32)].set(1.0)
+        rate = capacity_rate_jnp(jnp.abs(h), e_s, n0)
+        lat = jnp.sum(chi * payload / (bw * jnp.maximum(rate, 1e-9)))
+        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel)
+        return acc, lat
+
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True,
+                         sel_stream_np=sel_stream)
+
+
+@register_port(B.FedTOE)
+def _fedtoe(agg: "B.FedTOE", use_kernel: bool) -> JaxAggregator:
+    dim, bw = agg.dim, agg.B
+    k, p_out, t_budget, r_max = agg.k, agg.p_out, agg.t_budget, agg.r_max
+    rates = np.asarray(agg.rates)
+    thr = np.asarray(agg.thr)
+    n = rates.shape[0]
+
+    def sel_stream(seed, trial, T):
+        return rngstream.replay_rounds(
+            seed, trial, T, lambda rng: rng.choice(n, size=k, replace=False))
+
+    def round_fn(grads, h, z01, u, sel, t):
+        bits, in_alloc = greedy_bit_alloc_jax(
+            sel.astype(jnp.int32), jnp.asarray(rates), dim=dim,
+            bandwidth_hz=bw, t_budget_s=t_budget, r_max=r_max)
+        lat = jnp.sum(in_alloc * (64.0 + dim * bits)
+                      / (bw * jnp.maximum(rates, 1e-9)))
+        chi = (in_alloc * (jnp.abs(h) >= thr)).astype(grads.dtype)  # no outage
+        k_sched = jnp.maximum(jnp.sum(in_alloc), 1.0)
+        acc = _quantized_mean(grads, chi, chi * bits, u,
+                              k_sched * (1.0 - p_out), use_kernel)
+        return acc, lat
+
+    return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
+                         needs_noise=False, needs_dither=True,
+                         sel_stream_np=sel_stream)
 
 
 def as_functional(agg, use_kernel: bool = True) -> Optional[JaxAggregator]:
     """Functional port of a NumPy ``Aggregator`` instance, or None when the
-    scheme has no JAX port yet (the trainer then falls back to NumPy).
+    scheme has no registered port (the trainer then falls back to NumPy).
 
-    Ports are memoized on the aggregator instance so repeated runs (e.g.
-    the benchmarks' step-size grid search) share compiled scans.
+    Ports are resolved through the ``_PORT_FACTORIES`` routing table and
+    memoized on the aggregator instance so repeated runs (e.g. the
+    benchmarks' step-size grid search) share compiled scans.
     """
     if isinstance(agg, JaxAggregator):
         return agg
     cache = agg.__dict__.setdefault("_jax_ports", {})
     if use_kernel in cache:
         return cache[use_kernel]
-    port = None
-    if isinstance(agg, B.IdealFedAvg):
-        port = _ideal_fedavg()
-    elif isinstance(agg, (B.ProposedOTA, B.LCPCOTAComp)):
-        port = _from_ota_params(agg.params, agg.name, use_kernel)
-    elif isinstance(agg, B.VanillaOTA):
-        port = _vanilla_ota(agg, use_kernel)
-    elif isinstance(agg, B.OPCOTAComp):
-        port = _opc_ota_comp(agg, use_kernel)
-    elif isinstance(agg, B.ProposedDigital):
-        port = _proposed_digital(agg.params, agg.name, use_kernel)
+    factory = _PORT_FACTORIES.get(type(agg))
+    port = factory(agg, use_kernel) if factory is not None else None
     cache[use_kernel] = port
     return port
 
@@ -192,22 +436,26 @@ def _project(w, radius):
 class FLEngine:
     """vmap(lax.scan) Monte-Carlo FL simulator (same protocol as FLTrainer).
 
-    One jitted call runs all trials of all rounds: fading/noise/dither come
-    in as batched (trials, T, ...) tensors, rounds advance under a two-level
-    ``lax.scan`` (outer: eval segments, inner: rounds) so only the model
-    states at eval points are materialized, and trials are batched with
-    ``vmap`` — including through the Pallas epilogue kernels.
+    One jitted call runs all trials of all rounds: fading/noise/selection
+    draws come in as batched (trials, T, ...) tensors, quantization dither
+    streams from a scan-carried per-trial key (O(N*d) per round), rounds
+    advance under a two-level ``lax.scan`` (outer: eval segments, inner:
+    rounds) so only the model states at eval points are materialized, and
+    trials are batched with ``vmap`` — including through the Pallas epilogue
+    kernels — or laid over devices with ``shard_map`` when
+    ``shard_trials=True``.
     """
 
     def __init__(self, task, dataset, deployment: Deployment, eta: float, *,
                  project_radius: Optional[float] = None,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True, shard_trials: bool = False):
         self.task = task
         self.ds = dataset
         self.dep = deployment
         self.eta = eta
         self.project_radius = project_radius
         self.use_kernel = use_kernel
+        self.shard_trials = shard_trials
         self.xs = np.stack([d.x for d in dataset.devices]).astype(np.float32)
         self.ys = np.stack([d.y for d in dataset.devices]).astype(np.int32)
         self.x_all = np.concatenate(
@@ -221,22 +469,6 @@ class FLEngine:
         self._acc_v = jax.jit(jax.vmap(task.accuracy_fn,
                                        in_axes=(0, None, None)))
 
-    # ------------------------------------------------ randomness replay
-
-    def _dither_block(self, jagg: JaxAggregator, habs: np.ndarray,
-                      seed: int, trial: int, d: int) -> np.ndarray:
-        """(T, N, d) dither uniforms replaying the trainer's stream: one
-        uniform(d) per participating device per round, in (t, m) order."""
-        T, N = habs.shape
-        mask = jagg.dither_mask_np(habs)
-        rng = np.random.default_rng((seed, trial, 17))
-        u = np.zeros((T, N, d))
-        for t in range(T):
-            for m in range(N):
-                if mask[t, m]:
-                    u[t, m] = rng.uniform(size=d)
-        return u
-
     # ------------------------------------------------------- scan runner
 
     def _get_runner(self, jagg: JaxAggregator, trials: int, n_seg: int,
@@ -246,38 +478,64 @@ class FLEngine:
         # everything else closed over by trial_fn is shape-static, and all
         # run-varying scalars (eta, radius, lat_scale) are traced arguments
         key = (self.task, trials, n_seg, eval_every, d, N,
-               self.xs.shape, self.use_kernel)
+               self.xs.shape, self.use_kernel, self.shard_trials)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
         grads_fn = self.task.device_grads_fn
         round_fn = jagg.round_fn
+        needs_dither = jagg.needs_dither
 
-        def trial_fn(w0, eta, radius, lat_scale, xs, ys, H, Z, U, Ts):
-            # H: (n_seg, eval_every, N) complex; Z: (n_seg, eval_every, dz);
-            # U: (n_seg, eval_every, Nu, du); Ts: (n_seg, eval_every)
+        def trial_fn(w0, eta, radius, lat_scale, xs, ys, key, H, Z, SEL, Ts):
+            # key: scan-carried per-trial dither key; H: (n_seg, eval_every,
+            # N) complex; Z: (n_seg, eval_every, dz); SEL: (n_seg,
+            # eval_every, S); Ts: (n_seg, eval_every)
             def step(carry, inp):
-                w, t_wall = carry
-                h, z, u, t = inp
+                w, t_wall, dkey = carry
+                h, z, selrow, t = inp
                 g = grads_fn(w.astype(jnp.float32), xs, ys
                              ).astype(jnp.float64)
-                ghat, lat = round_fn(g, h, z, u, t)
+                if needs_dither:
+                    # one (N, d) block regenerated per round — the whole
+                    # dither stream never exists in memory at once
+                    u = rngstream.dither_block(dkey, t, N, d)
+                else:
+                    u = jnp.zeros((1, 1), jnp.float32)
+                ghat, lat = round_fn(g, h, z, u, selrow, t)
                 w_new = _project(w - eta * ghat, radius)
-                return (w_new, t_wall + lat * lat_scale), None
+                return (w_new, t_wall + lat * lat_scale, dkey), None
 
             def segment(carry, seg_inp):
                 out, _ = jax.lax.scan(step, carry, seg_inp)
-                return out, out
+                (w, t_wall, _) = out
+                return out, (w, t_wall)
 
-            carry0 = (w0, jnp.zeros((), jnp.float64))
-            _, (ws, walls) = jax.lax.scan(segment, carry0, (H, Z, U, Ts))
+            carry0 = (w0, jnp.zeros((), jnp.float64), key)
+            _, (ws, walls) = jax.lax.scan(segment, carry0, (H, Z, SEL, Ts))
             ws = jnp.concatenate([w0[None], ws], axis=0)          # (E, d)
             walls = jnp.concatenate([jnp.zeros((1,)), walls], axis=0)
             return ws, walls
 
-        runner = jax.jit(jax.vmap(
+        vmapped = jax.vmap(
             trial_fn,
-            in_axes=(None, None, None, None, None, None, 0, 0, 0, None)))
+            in_axes=(None, None, None, None, None, None, 0, 0, 0, 0, None))
+        if self.shard_trials:
+            from ..compat import shard_map as shard_map_compat
+            n_hw = len(jax.devices())
+            if trials % n_hw != 0:
+                raise ValueError(
+                    f"shard_trials needs trials ({trials}) divisible by the "
+                    f"device count ({n_hw})")
+            mesh = jax.make_mesh((n_hw,), ("trials",))
+            P = jax.sharding.PartitionSpec
+            vmapped = shard_map_compat(
+                vmapped, mesh,
+                in_specs=(P(), P(), P(), P(), P(), P(),
+                          P("trials"), P("trials"), P("trials"), P("trials"),
+                          P()),
+                out_specs=(P("trials"), P("trials")),
+                manual_axes=("trials",))
+        runner = jax.jit(vmapped)
         jagg._runner_cache[key] = runner
         return runner
 
@@ -300,15 +558,17 @@ class FLEngine:
                                           seed * 1000 + tr, T)
                       for tr in range(trials)])               # (trials, T, N)
         if jagg.needs_noise:
-            Z = np.stack([np.random.default_rng((seed, tr, 17))
+            Z = np.stack([rngstream.trial_rng(seed, tr)
                           .standard_normal((T, d)) for tr in range(trials)])
         else:
             Z = np.zeros((trials, T, 1))
-        if jagg.needs_dither:
-            U = np.stack([self._dither_block(jagg, np.abs(H[tr]), seed, tr, d)
-                          for tr in range(trials)])
+        if jagg.sel_stream_np is not None:
+            SEL = np.stack([jagg.sel_stream_np(seed, tr, T)
+                            for tr in range(trials)])         # (trials, T, S)
         else:
-            U = np.zeros((trials, T, 1, 1))
+            SEL = np.zeros((trials, T, 1))
+        keys = jnp.stack([rngstream.dither_base_key(seed, tr)
+                          for tr in range(trials)])
 
         with enable_x64():
             runner = self._get_runner(jagg, trials, n_seg, eval_every)
@@ -325,7 +585,7 @@ class FLEngine:
             Ts = jnp.arange(T).reshape(n_seg, eval_every)
             ws, walls = runner(w0, eta, radius, lat_scale,
                                jnp.asarray(self.xs), jnp.asarray(self.ys),
-                               seg(H), seg(Z), seg(U), Ts)
+                               keys, seg(H), seg(Z), seg(SEL), Ts)
             losses, accs = self._evaluate(ws)
             opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
                        if w_star is not None else None)

@@ -16,6 +16,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..core import rngstream
 from ..core.baselines import Aggregator
 from ..core.channel import Deployment, FadingProcess
 
@@ -71,7 +72,8 @@ class FLTrainer:
         backend: "numpy" — reference Python-loop path; "jax" — vectorized
         vmap/scan engine (``fl.engine``), errors if the scheme/options have
         no JAX port; "auto" (default) — the engine when supported (full
-        batch, no time budget, ported scheme), NumPy otherwise. Both
+        batch, no time budget, scheme registered in the engine's port
+        routing table — all 14 paper baselines are), NumPy otherwise. Both
         backends replay the same random streams, so trajectories agree to
         ~1e-5 (tests/test_engine_parity.py).
         """
@@ -145,7 +147,20 @@ class FLTrainer:
                     xs, ys = np.stack(bx), np.stack(by)
                 grads = self.task.device_grads(w, xs, ys)
                 h = fading.sample(t)
-                res = aggregator.round(list(grads), h, t, rng)
+                # digital schemes consume counter-based dither (one (N, d)
+                # block per round, bit-replayable by the JAX engine); OTA
+                # schemes only draw AWGN from the sequential trial rng
+                # the kwarg is only passed when a block exists, so custom
+                # OTA aggregators with the pre-dither 4-arg round() keep
+                # working
+                if aggregator.is_ota:
+                    res = aggregator.round(list(grads), h, t, rng)
+                else:
+                    u_t = rngstream.dither_block_np(seed, trial, t,
+                                                    self.dep.n_devices,
+                                                    self.task.dim)
+                    res = aggregator.round(list(grads), h, t, rng,
+                                           dither=u_t)
                 if aggregator.is_ota:
                     t_wall += res.latency_s / self.dep.cfg.bandwidth_hz
                 else:

@@ -27,14 +27,16 @@ def _kernel(scal_ref, g_ref, u_ref, o_ref):
     levels = scal_ref[0, 1]
     g = g_ref[...]
     u = u_ref[...]
-    delta = 2.0 * m / levels
-    safe = jnp.where(delta > 0, delta, 1.0)
+    # degenerate scalars quantize to zero: m == 0 (zero tensor) and
+    # levels <= 0 (device granted no bits by the selection/bit allocation)
+    valid = (levels > 0) & (m > 0)
+    safe = jnp.where(valid, 2.0 * m / jnp.where(levels > 0, levels, 1.0), 1.0)
     x = (g + m) / safe
     lo = jnp.floor(x)
     up = (u < (x - lo)).astype(g.dtype)
     q = jnp.clip(lo + up, 0.0, levels)
     out = -m + safe * q
-    o_ref[...] = jnp.where(delta > 0, out, jnp.zeros_like(g))
+    o_ref[...] = jnp.where(valid, out, jnp.zeros_like(g))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))

@@ -14,6 +14,7 @@ from .dithered_quant import (dithered_quantize_2d, dithered_quantize_rows_2d,
                              BLOCK_ROWS, LANES)
 from .ota_combine import ota_combine_2d
 from .linear_scan import linear_scan_fsl, CHUNK
+from .row_reduce import row_maxabs_sumsq_2d
 
 
 def _on_cpu() -> bool:
@@ -107,6 +108,26 @@ def dithered_quantize_batch(gs: jnp.ndarray, levels: jnp.ndarray,
     out = dithered_quantize_rows_2d(pad(gs), pad(dither), scal,
                                     interpret=_on_cpu(), block_rows=br)
     return out.reshape(n_dev, d + d_pad)[:, :d]
+
+
+def row_maxabs_sumsq(gs: jnp.ndarray, *, use_kernel: bool = True):
+    """Per-device gradient statistics in one fused pass.
+
+    gs: (N, d). Returns (maxabs (N,), sumsq (N,)): ``||g_m||_inf`` (the
+    quantizer scale / quantization-MSE ingredient d*maxabs^2/(2^r-1)^2)
+    and ``sum g_m^2`` (norm-based scheduling scores), computed by the
+    Pallas row-reduction kernel (interpret on CPU, Mosaic on TPU).
+    """
+    if not use_kernel:
+        return jnp.max(jnp.abs(gs), axis=1), jnp.sum(gs * gs, axis=1)
+    n_dev, d = gs.shape
+    br = _fit_block_rows(d)
+    per = br * LANES
+    d_pad = (-d) % per
+    g2d = jnp.pad(gs, ((0, 0), (0, d_pad))).reshape(-1, LANES)
+    out = row_maxabs_sumsq_2d(g2d, n_dev=n_dev, interpret=_on_cpu(),
+                              block_rows=br)
+    return out[:, 0], out[:, 1]
 
 
 def ota_combine_with_noise(g: jnp.ndarray, alpha: jnp.ndarray,

@@ -119,22 +119,47 @@ def parse_computations(hlo: str) -> dict:
 _OPERAND_RE = re.compile(r"\(%?([\w\.\-]+)")
 
 
-def _operand_names(op: _Op) -> list:
+def _operand_args(op: _Op) -> str:
     after = op.rhs.split(op.opcode + "(", 1)
     if len(after) < 2:
-        return []
-    args = after[1].split(")", 1)[0]
-    return re.findall(r"%?([\w\.\-]+)", args)
+        return ""
+    return after[1].split(")", 1)[0]
+
+
+def _operand_names(op: _Op) -> list:
+    args = _operand_args(op)
+    # optimized HLO writes typed operands ("f32[128,128]{1,0} %dot.0"):
+    # the %-sigiled token is the name; fall back to bare tokens for
+    # scheduled HLO, skipping dtype keywords
+    names = re.findall(r"%([\w\.\-]+)", args)
+    if names:
+        return names
+    return [tok for tok in re.findall(r"([\w\.\-]+)", args)
+            if tok not in _DTYPE_BYTES]
+
+
+def _operand_shapes(op: _Op) -> list:
+    """Inline operand dims lists, when the HLO carries typed operands."""
+    shapes = []
+    for m in _SHAPE_RE.finditer(_operand_args(op)):
+        dims = m.group(2)
+        shapes.append([int(x) for x in dims.split(",")] if dims else [])
+    return shapes
 
 
 def _dot_flops(op: _Op, shape_of) -> float:
     """2 * prod(result) * K, K = product of lhs contracting dims.
 
-    Scheduled HLO omits inline operand types, so operand shapes come from
-    the ``shape_of`` symbol table (op name -> dims list).
+    Operand shapes come from the inline operand types when present
+    (optimized HLO) and from the ``shape_of`` symbol table (op name ->
+    dims list) otherwise (scheduled HLO omits inline types).
     """
-    names = _operand_names(op)
-    lhs_dims = shape_of(names[0]) if names else None
+    shapes = _operand_shapes(op)
+    if shapes:
+        lhs_dims = shapes[0]
+    else:
+        names = _operand_names(op)
+        lhs_dims = shape_of(names[0]) if names else None
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
     k = 1
     if lhs_dims and mc and mc.group(1):
@@ -147,9 +172,13 @@ def _dot_flops(op: _Op, shape_of) -> float:
 
 
 def _conv_flops(op: _Op, shape_of) -> float:
-    names = _operand_names(op)
     out_elems, _ = _shape_elems_bytes(op.result_text)
-    kdims = shape_of(names[1]) if len(names) > 1 else None
+    shapes = _operand_shapes(op)
+    if len(shapes) > 1:
+        kdims = shapes[1]
+    else:
+        names = _operand_names(op)
+        kdims = shape_of(names[1]) if len(names) > 1 else None
     if kdims:
         kernel = 1
         for d in kdims:

@@ -11,12 +11,12 @@ Target hardware (roofline constants live in benchmarks/roofline.py):
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import make_auto_mesh
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False, data_axis=None):

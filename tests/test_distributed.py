@@ -15,10 +15,20 @@ import pytest
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.launch.sharding import ShardingRules, decode_rules
 from repro.launch.hlo_cost import analyze_hlo, parse_computations
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Partial-auto shard_map (client axes manual, "model" axis automatic) hits
+# an XLA SPMD partitioner check ("IsManualSubgroup") on jax<=0.4.x; the
+# compat shim covers the API surface but not that compiler bug, so the
+# mixed-mode train step needs a current jax.
+requires_current_shard_map = pytest.mark.skipif(
+    not compat.HAS_TOPLEVEL_SHARD_MAP,
+    reason="partial-auto shard_map miscompiles on jax<=0.4.x "
+           "(XLA IsManualSubgroup check)")
 
 
 def run_sub(code: str, devices: int = 8) -> str:
@@ -108,15 +118,15 @@ class TestHLOCost:
 
 @pytest.mark.slow
 class TestMultiDevice:
+    @requires_current_shard_map
     def test_train_step_aggregators(self):
         out = run_sub("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType
+            from repro.compat import make_auto_mesh
             from repro.configs import get_config
             from repro.models import make_model, make_batch
             from repro.launch.steps import make_train_step, fl_round_arrays
-            mesh = jax.make_mesh((4,2), ("data","model"),
-                                 axis_types=(AxisType.Auto,)*2)
+            mesh = make_auto_mesh((4,2), ("data","model"))
             cfg = get_config("qwen3-moe-30b-a3b").scaled_down()
             model = make_model(cfg)
             params = model.init(jax.random.key(0))
@@ -142,10 +152,10 @@ class TestMultiDevice:
         """wireless_psum(ota) == numpy OTA aggregation on the same grads."""
         out = run_sub("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType, PartitionSpec as P
+            from jax.sharding import PartitionSpec as P
+            from repro.compat import make_auto_mesh, shard_map
             from repro.core.collectives import WirelessRound, wireless_psum
-            mesh = jax.make_mesh((4,), ("data",),
-                                 axis_types=(AxisType.Auto,))
+            mesh = make_auto_mesh((4,), ("data",))
             grads = np.arange(4 * 6, dtype=np.float32).reshape(4, 6)
             weight = np.array([0.5, 0.0, 1.5, 1.0], np.float32)
             alpha = 2.5
@@ -155,10 +165,9 @@ class TestMultiDevice:
                                   levels=jnp.float32(255.0))
                 return wireless_psum({"g": g[0]}, r, ("data",), key,
                                      mode="ota", use_kernel=False)["g"]
-            f = jax.shard_map(body, mesh=mesh,
-                              in_specs=(P("data"), P("data"), P()),
-                              out_specs=P(), axis_names={"data"},
-                              check_vma=False)
+            f = shard_map(body, mesh,
+                          in_specs=(P("data"), P("data"), P()),
+                          out_specs=P(), manual_axes=("data",))
             got = jax.jit(f)(jnp.asarray(grads).reshape(4, 1, 6),
                              jnp.asarray(weight), jax.random.key(0))
             want = (weight[:, None] * grads).sum(0) / alpha
@@ -171,12 +180,11 @@ class TestMultiDevice:
     def test_decode_step_multidevice(self):
         out = run_sub("""
             import jax, numpy as np
-            from jax.sharding import AxisType
+            from repro.compat import make_auto_mesh
             from repro.configs import get_config
             from repro.models import make_model
             from repro.launch.steps import make_decode_step
-            mesh = jax.make_mesh((4,2), ("data","model"),
-                                 axis_types=(AxisType.Auto,)*2)
+            mesh = make_auto_mesh((4,2), ("data","model"))
             for arch in ("gemma3-4b", "falcon-mamba-7b"):
                 cfg = get_config(arch).scaled_down()
                 model = make_model(cfg)

@@ -1,11 +1,12 @@
 """NumPy-trainer vs JAX-engine parity: same seed -> same trajectories.
 
 The engine (fl/engine.py) replays the NumPy trainer's random streams —
-fading, PS AWGN, quantization dither — so the two backends must agree
-per eval point to (r/a)tol 1e-5 on loss, accuracy, opt-error, and
-wall-clock, for every ported scheme. This is the contract that lets
-``FLTrainer.run(backend="auto")`` route through the engine without
-changing any benchmark's numbers.
+fading, PS AWGN, counter-based quantization dither, selection draws — so
+the two backends must agree per eval point to (r/a)tol 1e-5 on loss,
+accuracy, opt-error, and wall-clock, for EVERY scheme in
+``core.baselines`` (the full Sec. V suite, ``test_full_suite``). This is
+the contract that lets ``FLTrainer.run(backend="auto")`` route through
+the engine without changing any benchmark's numbers.
 """
 import numpy as np
 import pytest
@@ -90,6 +91,40 @@ def _run_both(setup, agg, w_star=None):
     return log_np, log_jx
 
 
+def _cfg_args(setup):
+    task, _, dep, _, _ = setup
+    return (task.dim, task.g_max, dep.cfg.energy_per_symbol,
+            dep.cfg.noise_power)
+
+
+#: name -> factory(setup) covering the 8 schemes ported in the full-suite
+#: engine refactor (the original 6 keep their dedicated tests below)
+SCHEME_FACTORIES = {
+    "opc_ota_fl": lambda s: B.OPCOTAFL(*_cfg_args(s)),
+    "bbfl_interior": lambda s: B.BBFLInterior(s[2], *_cfg_args(s)),
+    "bbfl_alternative": lambda s: B.BBFLAlternative(s[2], *_cfg_args(s)),
+    "best_channel": lambda s: B.BestChannel(
+        s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
+    "best_channel_norm": lambda s: B.BestChannelNorm(
+        s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
+    "prop_fairness": lambda s: B.PropFairness(
+        s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
+    "uqos": lambda s: B.UQOS(s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
+    "qml": lambda s: B.QML(s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
+    "fedtoe": lambda s: B.FedTOE(s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
+}
+
+
+class _UnportedAggregator(B.Aggregator):
+    """A scheme with no registered JAX port (tests the NumPy fallback)."""
+
+    name = "unported"
+
+    def round(self, grads, h, t, rng, dither=None):
+        g = np.mean(np.stack([np.asarray(g) for g in grads]), axis=0)
+        return B.RoundResult(g, 0.0, np.ones(len(grads)), {})
+
+
 class TestTrajectoryParity:
     def test_ideal_fedavg(self, setup):
         _assert_logs_match(*_run_both(setup, B.IdealFedAvg()))
@@ -128,6 +163,70 @@ class TestTrajectoryParity:
         # vary with participation yet match across backends (checked above)
         assert np.all(np.diff(np.asarray(log_jx.wall_time_s)) > 0)
 
+    @pytest.mark.parametrize("scheme", sorted(SCHEME_FACTORIES))
+    def test_full_suite(self, setup, scheme):
+        """Every remaining Sec. V baseline: trajectory parity through the
+        jittable selection / bit-allocation / RNG-replay machinery."""
+        _assert_logs_match(*_run_both(setup, SCHEME_FACTORIES[scheme](setup)))
+
+    def test_mlp_task_parity(self, setup):
+        """Non-convex MLPTask (the fig3 path) agrees across backends for
+        both an OTA and a digital selection scheme."""
+        from repro.fl.tasks import MLPTask
+
+        _, ds, dep, _, _ = setup
+        task = MLPTask(n_features=784, hidden=8, mu_nc=0.01, g_max=20.0)
+        tr = FLTrainer(task, ds, dep, eta=0.05)
+        for agg in (B.VanillaOTA(task.dim, task.g_max,
+                                 dep.cfg.energy_per_symbol,
+                                 dep.cfg.noise_power),
+                    B.BestChannel(dep, task.dim, task.g_max,
+                                  dep.cfg.energy_per_symbol,
+                                  dep.cfg.noise_power,
+                                  dep.cfg.bandwidth_hz)):
+            log_np = tr.run(agg, rounds=10, trials=1, eval_every=5, seed=3,
+                            backend="numpy")
+            log_jx = tr.run(agg, rounds=10, trials=1, eval_every=5, seed=3,
+                            backend="jax")
+            _assert_logs_match(log_np, log_jx)
+
+
+class TestGreedyBitAlloc:
+    def test_matches_numpy_oracle(self, setup):
+        """Jittable greedy allocator == FedTOE._alloc_bits on random
+        scheduled sets, including budget-deferral and r_max saturation."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        from repro.core.digital import greedy_bit_alloc_jax
+
+        task, _, dep, _, _ = setup
+        cfg = dep.cfg
+        rng = np.random.default_rng(42)
+        configs = [
+            dict(t_budget_s=0.22),            # paper default
+            dict(t_budget_s=0.04),            # tight: 1-bit deferrals
+            dict(t_budget_s=5.0, r_max=6),    # loose: r_max saturation
+        ]
+        with enable_x64():
+            for kw in configs:
+                agg = B.FedTOE(dep, task.dim, task.g_max,
+                               cfg.energy_per_symbol, cfg.noise_power,
+                               cfg.bandwidth_hz, k=5, **kw)
+                for _ in range(10):
+                    sel = rng.choice(dep.n_devices, size=agg.k,
+                                     replace=False)
+                    want = agg._alloc_bits(sel)
+                    bits, in_alloc = greedy_bit_alloc_jax(
+                        jnp.asarray(sel), jnp.asarray(agg.rates),
+                        dim=task.dim, bandwidth_hz=cfg.bandwidth_hz,
+                        t_budget_s=agg.t_budget, r_max=agg.r_max)
+                    got = {m: int(b) for m, b in
+                           enumerate(np.asarray(bits)) if b > 0}
+                    assert got == want, (kw, sel)
+                    assert set(np.flatnonzero(np.asarray(in_alloc))) \
+                        == set(want)
+
 
 class TestBackendDispatch:
     def test_auto_uses_engine_for_ported_schemes(self, setup):
@@ -136,10 +235,22 @@ class TestBackendDispatch:
         tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2, seed=0)
         assert tr._engine is not None
 
+    def test_every_baseline_scheme_is_ported(self, setup):
+        """The routing table covers the paper's whole Sec. V suite — no
+        scheme silently drops to the NumPy loop under backend="auto"."""
+        task, _, dep, _, _ = setup
+        args = (task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                dep.cfg.noise_power)
+        suite = [B.IdealFedAvg(), B.VanillaOTA(*args), B.OPCOTAComp(*args),
+                 B.OPCOTAFL(*args), B.BBFLInterior(dep, *args),
+                 B.BBFLAlternative(dep, *args)]
+        suite += [f(setup) for f in SCHEME_FACTORIES.values()]
+        for agg in suite:
+            assert as_functional(agg) is not None, agg.name
+
     def test_auto_falls_back_for_unported_schemes(self, setup):
         task, ds, dep, eta, _ = setup
-        agg = B.BBFLInterior(dep, task.dim, task.g_max,
-                             dep.cfg.energy_per_symbol, dep.cfg.noise_power)
+        agg = _UnportedAggregator()
         assert as_functional(agg) is None
         tr = FLTrainer(task, ds, dep, eta=eta)
         log = tr.run(agg, rounds=4, trials=1, eval_every=2, seed=0)
@@ -148,8 +259,7 @@ class TestBackendDispatch:
 
     def test_jax_backend_rejects_unsupported(self, setup):
         task, ds, dep, eta, _ = setup
-        agg = B.BBFLInterior(dep, task.dim, task.g_max,
-                             dep.cfg.energy_per_symbol, dep.cfg.noise_power)
+        agg = _UnportedAggregator()
         tr = FLTrainer(task, ds, dep, eta=eta)
         with pytest.raises(ValueError, match="no JAX port"):
             tr.run(agg, rounds=4, trials=1, eval_every=2, backend="jax")
@@ -160,10 +270,23 @@ class TestBackendDispatch:
     def test_engine_rejects_unported_aggregator(self, setup):
         task, ds, dep, eta, _ = setup
         eng = FLEngine(task, ds, dep, eta)
-        agg = B.BBFLInterior(dep, task.dim, task.g_max,
-                             dep.cfg.energy_per_symbol, dep.cfg.noise_power)
         with pytest.raises(ValueError, match="no JAX port"):
-            eng.run(agg, rounds=4, trials=1, eval_every=2)
+            eng.run(_UnportedAggregator(), rounds=4, trials=1, eval_every=2)
+
+    def test_shard_trials_flag(self, setup):
+        """shard_map over the trials axis reproduces the vmap trajectory
+        (single-device mesh here; multi-host is the same flag)."""
+        task, ds, dep, eta, _ = setup
+        agg = B.VanillaOTA(task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                           dep.cfg.noise_power)
+        eng = FLEngine(task, ds, dep, eta, shard_trials=True)
+        log_sh = eng.run(agg, rounds=6, trials=2, eval_every=2, seed=11)
+        log_vm = FLEngine(task, ds, dep, eta).run(
+            agg, rounds=6, trials=2, eval_every=2, seed=11)
+        np.testing.assert_allclose(log_sh.global_loss, log_vm.global_loss,
+                                   **TOL)
+        np.testing.assert_allclose(np.asarray(log_sh.wall_time_s),
+                                   np.asarray(log_vm.wall_time_s), **TOL)
 
     def test_non_divisible_rounds(self, setup, ota_params):
         """rounds not a multiple of eval_every: evals stop at the last grid
