@@ -103,7 +103,38 @@ def estimate_kappa_nc(task, ds, n_probes: int = 3) -> float:
     return worst
 
 
-def design_ota(task, dep, eta, *, kappa_sc: float = 3.0, solver: str = "sca"):
+def _solve_ota_spec(spec, solver: str):
+    """Route one OTA design spec: jax batch / SciPy SCA / SciPy direct.
+
+    ``solver`` is one of "auto"/"jax" (batched ``core.sca_jax`` path,
+    "auto" currently resolves to it), "sca"/"scipy" (the trusted SLSQP
+    SCA oracle), or "direct" (L-BFGS-B on the gamma reduction).
+    """
+    if solver in ("jax", "auto"):
+        params, objs = ota_design.design_ota_batch([spec])
+        return params[0], float(objs[0])
+    if solver == "direct":
+        return ota_design.design_ota_direct(spec)
+    if solver in ("sca", "scipy"):
+        params, res = ota_design.design_ota_sca(spec, n_iters=8)
+        return params, res.objective
+    raise ValueError(f"unknown design solver {solver!r}")
+
+
+def _solve_digital_spec(spec, solver: str):
+    """Route one digital design spec; same solver names as the OTA router."""
+    if solver in ("jax", "auto"):
+        params, objs = digital_design.design_digital_batch([spec])
+        return params[0], float(objs[0])
+    if solver == "direct":
+        return digital_design.design_digital_direct(spec)
+    if solver in ("sca", "scipy"):
+        params, res = digital_design.design_digital_sca(spec, n_iters=8)
+        return params, res.objective
+    raise ValueError(f"unknown design solver {solver!r}")
+
+
+def design_ota(task, dep, eta, *, kappa_sc: float = 3.0, solver: str = "auto"):
     cfg = dep.cfg
     w = ObjectiveWeights.strongly_convex(eta=eta, mu=getattr(task, "mu", 0.01),
                                          kappa_sc=kappa_sc,
@@ -111,15 +142,11 @@ def design_ota(task, dep, eta, *, kappa_sc: float = 3.0, solver: str = "sca"):
     spec = ota_design.OTADesignSpec(
         lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
         e_s=cfg.energy_per_symbol, n0=cfg.noise_power, weights=w)
-    if solver == "direct":
-        params, obj = ota_design.design_ota_direct(spec)
-        return params, obj
-    params, res = ota_design.design_ota_sca(spec, n_iters=8)
-    return params, res.objective
+    return _solve_ota_spec(spec, solver)
 
 
 def design_ota_nc(task, dep, eta, *, smooth_l: float = 10.0,
-                  kappa_frac: float = 0.25, solver: str = "sca"):
+                  kappa_frac: float = 0.25, solver: str = "auto"):
     """Non-convex weights (footnote 4): (eta*L, N*kappa_nc^2)."""
     cfg = dep.cfg
     kappa_nc = kappa_frac * 2 * task.g_max
@@ -128,14 +155,11 @@ def design_ota_nc(task, dep, eta, *, smooth_l: float = 10.0,
     spec = ota_design.OTADesignSpec(
         lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
         e_s=cfg.energy_per_symbol, n0=cfg.noise_power, weights=w)
-    if solver == "direct":
-        return ota_design.design_ota_direct(spec)
-    params, res = ota_design.design_ota_sca(spec, n_iters=8)
-    return params, res.objective
+    return _solve_ota_spec(spec, solver)
 
 
 def design_digital(task, dep, eta, *, kappa_sc: float = 3.0,
-                   t_max_s: float = 0.2, solver: str = "sca"):
+                   t_max_s: float = 0.2, solver: str = "auto"):
     cfg = dep.cfg
     w = ObjectiveWeights.strongly_convex(eta=eta, mu=task.mu,
                                          kappa_sc=kappa_sc, n=dep.n_devices)
@@ -143,10 +167,7 @@ def design_digital(task, dep, eta, *, kappa_sc: float = 3.0,
         lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
         e_s=cfg.energy_per_symbol, n0=cfg.noise_power,
         bandwidth_hz=cfg.bandwidth_hz, t_max_s=t_max_s, weights=w)
-    if solver == "direct":
-        return digital_design.design_digital_direct(spec)
-    params, res = digital_design.design_digital_sca(spec, n_iters=8)
-    return params, res.objective
+    return _solve_digital_spec(spec, solver)
 
 
 def run_tuned(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,

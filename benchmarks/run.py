@@ -22,12 +22,14 @@ def main() -> None:
     quick = not args.full
 
     from . import (fig2_ota_sc, fig2_digital_sc, fig3_nonconvex, roofline,
-                   kernel_bench, theorem_validation, engine_bench)
+                   kernel_bench, theorem_validation, engine_bench,
+                   design_bench)
     modules = {
         "kernel_bench": kernel_bench,
         "roofline": roofline,
         "theorem_validation": theorem_validation,
         "engine_bench": engine_bench,
+        "design_bench": design_bench,
         "fig2_ota_sc": fig2_ota_sc,
         "fig2_digital_sc": fig2_digital_sc,
         "fig3_nonconvex": fig3_nonconvex,

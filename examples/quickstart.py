@@ -63,6 +63,22 @@ def main():
     print("participation levels p_m:", np.round(p, 4))
     print("Lemma-1 variance:", lemma1_variance(params, dep.lambdas))
 
+    # The same design through the batched JAX solver (solver="jax" in the
+    # benchmark pipelines): a whole omega sweep solves in ONE jit — here the
+    # fig2-style bias-variance trade-off grid around the operating point.
+    import dataclasses
+    import time
+    sweep = [dataclasses.replace(
+        dspec, weights=ObjectiveWeights(omega_var=weights.omega_var,
+                                        omega_bias=weights.omega_bias * s))
+        for s in (0.1, 1.0, 10.0)]
+    t0 = time.perf_counter()
+    _, objs = ota_design.design_ota_batch(sweep)
+    print(f"\nbatched JAX design (3-point omega_bias sweep, "
+          f"{time.perf_counter() - t0:.2f}s incl. jit):")
+    print("  objectives:", np.round(objs, 3),
+          f"(middle point vs SCA: {objs[1] - res.objective:+.2e})")
+
     trainer = FLTrainer(task, ds, dep, eta=eta)
     for agg in (B.IdealFedAvg(), B.ProposedOTA(params),
                 B.VanillaOTA(task.dim, task.g_max,

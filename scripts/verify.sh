@@ -4,7 +4,9 @@
 #   ./scripts/verify.sh          # or: make verify
 #
 # Mirrors ROADMAP.md's tier-1 command, then smoke-runs the NumPy-vs-JAX
-# engine benchmark (records experiments/results/engine_bench.json) and the
+# engine benchmark (records experiments/results/engine_bench.json), the
+# design-solver benchmark (batched JAX SCA vs the per-point SciPy oracle;
+# fails if the JAX path loses objective quality anywhere), and the
 # 1500-round digital engine horizon under a fixed peak-RSS budget — the
 # streaming-dither O(N*d) memory contract (a rematerialized
 # (trials, T, N, d) dither tensor would blow the budget by ~1.9 GB).
@@ -21,14 +23,18 @@ echo "== engine benchmark (smoke) =="
 python -m benchmarks.engine_bench --smoke
 bench_status=$?
 
+echo "== design benchmark (smoke: jax vs SCA-oracle quality) =="
+python -m benchmarks.design_bench --smoke
+design_status=$?
+
 echo "== digital engine 1500-round horizon (peak-RSS guard) =="
 python -m benchmarks.engine_bench --digital-long --rss-budget-mb 2048
 mem_status=$?
 
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
-        || [ "$mem_status" -ne 0 ]; then
+        || [ "$design_status" -ne 0 ] || [ "$mem_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
-         "mem=$mem_status)" >&2
+         "design=$design_status mem=$mem_status)" >&2
     exit 1
 fi
 echo "verify OK"

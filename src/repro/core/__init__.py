@@ -6,8 +6,10 @@ Public surface:
   digital     — biased digital aggregation (Sec. II-B) + Lemma 2
   quantize    — dithered stochastic uniform quantizer
   bounds      — Theorem 1/2 convergence bounds
-  sca         — successive convex approximation driver
-  ota_design / digital_design — Sec. IV parameter design (SCA + direct)
+  sca         — successive convex approximation driver (SciPy oracle)
+  sca_jax     — batched jit/vmap design solver over whole sweep grids
+  ota_design / digital_design — Sec. IV parameter design (SCA + direct +
+                batched jax)
   baselines   — SOTA OTA/digital comparison schemes (Sec. V)
   collectives — wireless_psum: the technique as a distributed collective
 """
@@ -17,9 +19,10 @@ from .ota import OTAParams, lemma1_variance, ota_round
 from .digital import DigitalParams, lemma2_variance, digital_round
 from .bounds import (ObjectiveWeights, bias_sum, design_objective,
                      theorem1_bound, theorem2_bound)
-from .ota_design import OTADesignSpec, design_ota_sca, design_ota_direct
+from .ota_design import (OTADesignSpec, design_ota_sca, design_ota_direct,
+                         design_ota_batch)
 from .digital_design import (DigitalDesignSpec, design_digital_sca,
-                             design_digital_direct)
+                             design_digital_direct, design_digital_batch)
 
 __all__ = [
     "WirelessConfig", "Deployment", "FadingProcess", "make_deployment",
@@ -27,5 +30,6 @@ __all__ = [
     "DigitalParams", "lemma2_variance", "digital_round", "ObjectiveWeights",
     "bias_sum", "design_objective", "theorem1_bound", "theorem2_bound",
     "OTADesignSpec", "design_ota_sca", "design_ota_direct",
-    "DigitalDesignSpec", "design_digital_sca", "design_digital_direct",
+    "design_ota_batch", "DigitalDesignSpec", "design_digital_sca",
+    "design_digital_direct", "design_digital_batch",
 ]

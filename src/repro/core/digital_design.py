@@ -18,12 +18,16 @@ Solvers:
   * ``design_digital_direct`` — beyond-paper: SLSQP on the original (17)
     over the reduced variables (p, beta, r) (nu, R, t are pinned by the
     couplings), relaxing r to a continuum.
-Both finalize r_m = floor(r') + 1 (paper's rule) and re-verify latency.
+  * ``design_digital_batch``  — a whole sweep grid of (17) instances in
+    one batched jit (``core.sca_jax`` penalty solver over the same reduced
+    variables); specs stacked via ``stack_digital_specs``. The SciPy
+    paths stay the trusted oracle.
+All finalize r_m = floor(r') + 1 (paper's rule) and re-verify latency.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 from scipy import optimize
@@ -385,3 +389,68 @@ def design_digital_direct(spec: DigitalDesignSpec, *, maxiter: int = 400
     p = np.clip(p, 1e-10, 1)
     p /= p.sum()
     return finalize(spec, p, beta, r), best_f
+
+
+# ------------------------------------------------------- batched (jax)
+
+def default_anchors(spec: DigitalDesignSpec) -> np.ndarray:
+    """(A, 3N) packed (p, beta, r') anchors: the direct solver's set."""
+    n = spec.n
+    anchors = [anchor_uniform(spec), anchor_channel_weighted(spec)]
+    for r_try in (4.5, 7.5, 10.5):
+        b0 = _fit_latency(spec, np.full(n, 0.5), np.full(n, r_try))
+        anchors.append((np.full(n, 1.0 / n), b0, np.full(n, r_try)))
+    return np.stack([np.concatenate(a) for a in anchors])
+
+
+def stack_digital_specs(specs: Sequence[DigitalDesignSpec]) -> dict:
+    """Stack B design specs along a leading axis for the batched solver."""
+    n = specs[0].n
+    if any(s.n != n for s in specs):
+        raise ValueError("all specs in a batch must share the device count")
+    return {
+        "lambdas": np.stack([np.asarray(s.lambdas, np.float64)
+                             for s in specs]),
+        "dim": np.array([float(s.dim) for s in specs]),
+        "g_max": np.array([s.g_max for s in specs]),
+        "e_s": np.array([s.e_s for s in specs]),
+        "n0": np.array([s.n0 for s in specs]),
+        "bandwidth_hz": np.array([s.bandwidth_hz for s in specs]),
+        "t_max_s": np.array([s.t_max_s for s in specs]),
+        "r_max": np.array([float(s.r_max) for s in specs]),
+        "omega_var": np.array([s.weights.omega_var for s in specs]),
+        "omega_bias": np.array([s.weights.omega_bias for s in specs]),
+        "sigma_sq": np.stack([s.sigmas2 for s in specs]),
+    }
+
+
+def design_digital_batch(specs: Sequence[DigitalDesignSpec],
+                         anchors: Optional[np.ndarray] = None
+                         ) -> tuple[list[DigitalParams], np.ndarray]:
+    """Solve a grid of digital design problems (17) in one batched jit.
+
+    The JAX counterpart of calling ``design_digital_sca`` per point:
+    penalty/projection Adam on the reduced variables (p, beta, r') with
+    the latency budget (17b) restored exactly after every stage
+    (``core.sca_jax``). Per-point params go through the same ``finalize``
+    integer-bits rule as the SciPy solvers.
+
+    Returns (params, objectives): per-point ``DigitalParams`` and the (B,)
+    continuous-relaxed true objectives (17a) — the same convention as
+    ``design_digital_sca``'s ``SCAResult.objective``.
+    """
+    from . import sca_jax
+
+    if anchors is None:
+        anchors = np.stack([default_anchors(s) for s in specs])
+    stk = stack_digital_specs(specs)
+    xs, objs = sca_jax.solve_digital_batch(
+        stk["lambdas"], stk["dim"], stk["g_max"], stk["e_s"], stk["n0"],
+        stk["bandwidth_hz"], stk["t_max_s"], stk["r_max"],
+        stk["omega_var"], stk["omega_bias"], stk["sigma_sq"], anchors)
+    n = specs[0].n
+    params = []
+    for s, x in zip(specs, xs):
+        p, beta, r = x[:n], x[n:2 * n], x[2 * n:]
+        params.append(finalize(s, p, np.clip(beta, 1e-12, 1 - 1e-12), r))
+    return params, objs

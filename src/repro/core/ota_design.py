@@ -7,7 +7,7 @@ z = u_z * z' (u_z = u_g/u_a).  The scales u_g/u_a are set from the
 channel statistics (gamma_max / sum alpha_max), which keeps all variables
 O(1) — the paper itself notes the raw problem is ill-conditioned.
 
-Two solvers:
+Three solvers:
   * ``design_ota_sca``    — paper-faithful Sec. IV-A SCA on surrogate (16).
   * ``design_ota_direct`` — beyond-paper: note that under the simplex
     constraint (15e), (15b) forces alpha = sum_m alpha_m(gamma_m) and
@@ -15,6 +15,10 @@ Two solvers:
     original problem reduces to a smooth box-constrained minimization over
     gamma alone, solved with L-BFGS-B + jax gradients. Used as a
     cross-check/upper-bound on the SCA solution quality.
+  * ``design_ota_batch``  — a whole sweep grid of (15) instances solved in
+    one ``jit(vmap(...))`` (``core.sca_jax``, same gamma reduction as the
+    direct solver); specs stacked along a leading axis via
+    ``stack_ota_specs``. The SciPy paths stay the trusted oracle.
 
 Heuristic anchors (from the authors' prior work [1]):
   * min-noise-variance:  gamma_m = gamma_{m,max}  (maximizes alpha).
@@ -24,7 +28,7 @@ Heuristic anchors (from the authors' prior work [1]):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 import jax
@@ -79,10 +83,16 @@ def _alpha_m(spec: OTADesignSpec, gammas: np.ndarray) -> np.ndarray:
 def true_objective_from_gamma(spec: OTADesignSpec, gammas: np.ndarray) -> float:
     """Original objective (15a) evaluated at the physically-coupled point."""
     a = _alpha_m(spec, gammas)
-    alpha = float(np.sum(a))
+    # Past the stationary point (gamma >> gamma_max, e.g. under extreme
+    # path-loss heterogeneity) c_m*gamma^2 exceeds 709 and exp overflows to
+    # inf while p underflows to 0, yielding 0*inf = nan. Clipping the
+    # exponent keeps exp finite; the term still blows up smoothly (p^2
+    # dominates), so minimizers are unaffected. The alpha floor keeps the
+    # fully-degenerate input (every device past overflow) a huge-but-finite
+    # objective instead of a ZeroDivisionError.
+    alpha = max(float(np.sum(a)), 1e-150)
     p = a / alpha
-    with np.errstate(over="ignore"):
-        ratio = np.exp(spec.c_m() * gammas ** 2)        # gamma/alpha_m
+    ratio = np.exp(np.minimum(spec.c_m() * gammas ** 2, 700.0))  # gamma/alpha_m
     trans = float(np.sum(p ** 2 * spec.g_max ** 2 * (ratio - 1.0)))
     mb = float(np.sum(p ** 2 * spec.sigmas2))
     noise = spec.dim * spec.n0 / alpha ** 2
@@ -108,19 +118,16 @@ def anchor_zero_bias(spec: OTADesignSpec) -> np.ndarray:
     """Equalize alpha_m at min_m alpha_max -> p = 1/N exactly [1]."""
     c = spec.c_m()
     target = float(np.min(spec.alpha_max())) * (1.0 - 1e-9)
-    gmax = spec.gamma_max()
-    gammas = np.empty(spec.n)
-    for m in range(spec.n):
-        lo, hi = 0.0, gmax[m]
-        # alpha_m is increasing on [0, gamma_max]; bisect the smaller root
-        for _ in range(200):
-            mid = 0.5 * (lo + hi)
-            if mid * np.exp(-c[m] * mid ** 2) < target:
-                lo = mid
-            else:
-                hi = mid
-        gammas[m] = 0.5 * (lo + hi)
-    return gammas
+    # alpha_m is increasing on [0, gamma_max]; bisect the smaller root of
+    # alpha_m(gamma) = target over all devices at once
+    lo = np.zeros(spec.n)
+    hi = spec.gamma_max().copy()
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        below = mid * np.exp(-c * mid ** 2) < target
+        lo = np.where(below, mid, lo)
+        hi = np.where(below, hi, mid)
+    return 0.5 * (lo + hi)
 
 
 # ------------------------------------------------------------- SCA (paper)
@@ -306,3 +313,60 @@ def design_ota_direct(spec: OTADesignSpec, *, anchor: Optional[np.ndarray] = Non
         if res.fun < best_f:
             best_f, best_g = float(res.fun), np.clip(res.x * u_g, 0, gmax)
     return params_from_gamma(spec, best_g), best_f
+
+
+# ------------------------------------------------------- batched (jax)
+
+def default_anchors(spec: OTADesignSpec) -> np.ndarray:
+    """(A, N) heuristic gamma anchors: min-noise + zero-bias (Sec. IV-A)."""
+    return np.stack([anchor_min_noise(spec), anchor_zero_bias(spec)])
+
+
+def stack_ota_specs(specs: Sequence[OTADesignSpec]) -> dict:
+    """Stack B design specs along a leading axis for the batched solver.
+
+    All specs must share the device count N; everything else (channel
+    gains, dimension, energy, noise, objective weights) may vary per point
+    — they enter the solve as traced data, so one jit covers the sweep.
+    """
+    n = specs[0].n
+    if any(s.n != n for s in specs):
+        raise ValueError("all specs in a batch must share the device count")
+    return {
+        "lambdas": np.stack([np.asarray(s.lambdas, np.float64)
+                             for s in specs]),
+        "dim": np.array([float(s.dim) for s in specs]),
+        "g_max": np.array([s.g_max for s in specs]),
+        "e_s": np.array([s.e_s for s in specs]),
+        "n0": np.array([s.n0 for s in specs]),
+        "omega_var": np.array([s.weights.omega_var for s in specs]),
+        "omega_bias": np.array([s.weights.omega_bias for s in specs]),
+        "sigma_sq": np.stack([s.sigmas2 for s in specs]),
+    }
+
+
+def design_ota_batch(specs: Sequence[OTADesignSpec],
+                     anchors: Optional[np.ndarray] = None
+                     ) -> tuple[list[OTAParams], np.ndarray]:
+    """Solve a grid of OTA design problems (15) in one batched jit.
+
+    The JAX counterpart of calling ``design_ota_sca`` per point: same
+    heuristic anchors, same true objective (15a), but the whole batch
+    solves as one ``jit(vmap(...))`` (``core.sca_jax``). The SciPy SCA
+    path remains the trusted oracle; ``benchmarks/design_bench.py``
+    records the wall-clock gap and objective parity.
+
+    Returns (params, objectives): per-point ``OTAParams`` and the (B,)
+    true objectives at the returned designs.
+    """
+    from . import sca_jax
+
+    if anchors is None:
+        anchors = np.stack([default_anchors(s) for s in specs])
+    stk = stack_ota_specs(specs)
+    gammas, objs = sca_jax.solve_ota_gamma_batch(
+        stk["lambdas"], stk["dim"], stk["g_max"], stk["e_s"], stk["n0"],
+        stk["omega_var"], stk["omega_bias"], stk["sigma_sq"], anchors)
+    params = [params_from_gamma(s, np.clip(g, 0.0, s.gamma_max()))
+              for s, g in zip(specs, gammas)]
+    return params, objs

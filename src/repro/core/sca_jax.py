@@ -1,0 +1,296 @@
+"""Batched JAX SCA design solver — Sec. IV on a whole sweep grid at once.
+
+``core/sca.py`` drives one SciPy SLSQP solve per surrogate per anchor —
+trusted, but a Python loop per grid point: the paper's sweeps (omega
+trade-off grids, SNR points, heterogeneity levels, Monte-Carlo
+deployments) multiply 12–15 SLSQP solves by dozens of embarrassingly
+parallel design problems. This module solves the *whole grid in one jit*:
+
+  * OTA (15): the exact gamma-only reduction proven out by
+    ``design_ota_direct`` — under the simplex constraint (15e), the
+    coupling (15b) pins ``alpha = sum_m alpha_m(gamma_m)`` and
+    ``p_m = alpha_m/alpha``, so the original objective is a smooth
+    box-constrained function of gamma alone. The solver is projected
+    Adam with an SCA-style outer ``lax.scan`` of re-anchored stages at
+    decreasing step sizes.
+
+  * Digital (17): projected Adam on the reduced variables
+    ``(p, beta, r')`` with the latency constraint (17b) folded in as a
+    hinge penalty; the outer ``lax.scan`` escalates the penalty weight
+    (classic penalty-method SCA analogue). After every stage the iterate
+    is projected to *exact* feasibility — simplex projection for ``p``
+    and the same raise-thresholds bisection as
+    ``digital_design._fit_latency`` — and the true objective (17a) of
+    the feasible point is tracked, so the returned solution is always
+    feasible and its objective directly comparable to the SciPy oracle.
+
+Everything is float64 (``jax.experimental.enable_x64``) and vmapped over
+``anchors × grid points``; the SciPy path in ``sca.py`` remains the
+trusted oracle (``benchmarks/design_bench.py`` records wall-clock and
+objective parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+# Inner-solver schedule: SCA-style outer stages (re-anchor at the best
+# iterate, shrink the step) x Adam steps per stage. The variables are
+# pre-scaled to O(1), so the rates are problem-independent.
+_OTA_LRS = (0.1, 0.03, 0.01, 0.003)
+_OTA_STEPS = 300
+# Digital: penalty escalation mu_k with matching step-size decay.
+_DIG_MUS = (1.0, 10.0, 100.0, 1e3, 1e4)
+_DIG_LRS = (0.05, 0.02, 0.01, 0.005, 0.002)
+_DIG_STEPS = 400
+
+_B1, _B2, _ADAM_EPS = 0.9, 0.999, 1e-12
+
+
+def simplex_projection_jax(v: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean projection onto the probability simplex (jit/vmap-able).
+
+    Mirrors ``sca.simplex_projection`` (sort + cumsum threshold rule).
+    """
+    n = v.shape[0]
+    u = jnp.sort(v)[::-1]
+    css = jnp.cumsum(u)
+    cond = u * jnp.arange(1, n + 1) > (css - 1.0)
+    rho = jnp.max(jnp.where(cond, jnp.arange(n), -1))
+    theta = (css[rho] - 1.0) / (rho + 1.0)
+    return jnp.maximum(v - theta, 0.0)
+
+
+def _adam_descent(value_and_grad, x0, lo, hi, *, lr, n_steps, track_best):
+    """``n_steps`` of Adam projected onto the box [lo, hi] via clipping.
+
+    ``track_best=True`` additionally records the best objective seen at the
+    (already clipped) iterates — used where the objective IS the true
+    objective (OTA reduction); penalty objectives skip it.
+    """
+    m0 = jnp.zeros_like(x0)
+    v0 = jnp.zeros_like(x0)
+    f0 = value_and_grad(x0)[0]
+
+    def step(carry, i):
+        x, m, v, bx, bf = carry
+        f, g = value_and_grad(x)
+        if track_best:
+            bx = jnp.where(f < bf, x, bx)
+            bf = jnp.minimum(f, bf)
+        m = _B1 * m + (1.0 - _B1) * g
+        v = _B2 * v + (1.0 - _B2) * g * g
+        mhat = m / (1.0 - _B1 ** (i + 1))
+        vhat = v / (1.0 - _B2 ** (i + 1))
+        x = jnp.clip(x - lr * mhat / (jnp.sqrt(vhat) + _ADAM_EPS), lo, hi)
+        return (x, m, v, bx, bf), None
+
+    (x, _, _, bx, bf), _ = jax.lax.scan(
+        step, (x0, m0, v0, x0, f0), jnp.arange(n_steps))
+    return x, bx, bf
+
+
+# ------------------------------------------------------------- OTA (15)
+
+def _solve_ota_one(lambdas, dim, g_max, e_s, n0, wv, wb, s2, anchors):
+    """One OTA design point, all anchors: gamma-reduced objective (15a)."""
+    n = lambdas.shape[0]
+    c = g_max ** 2 / (dim * lambdas * e_s)
+    gmax = jnp.sqrt(lambdas * dim * e_s / (2.0 * g_max ** 2))
+    u_g = jnp.median(gmax)                       # O(1) scaling, as the oracle
+    g2 = g_max ** 2
+    lo, hi = 1e-6, gmax / u_g
+
+    def obj(gs):
+        gam = gs * u_g
+        x = c * gam ** 2
+        a = gam * jnp.exp(-x)
+        alpha = jnp.sum(a)
+        p = a / alpha
+        # exp clip mirrors true_objective_from_gamma's overflow guard
+        trans = jnp.sum(p ** 2 * g2 * (jnp.exp(jnp.minimum(x, 700.0)) - 1.0))
+        noise = dim * n0 / alpha ** 2
+        return (wv * (trans + jnp.sum(p ** 2 * s2) + noise)
+                + wb * jnp.sum((p - 1.0 / n) ** 2))
+
+    vg = jax.value_and_grad(obj)
+    scale = 1.0 / jnp.maximum(jnp.abs(obj(jnp.clip(
+        anchors[0] / u_g, lo, hi))), 1e-30)
+
+    def scaled_vg(x):
+        f, g = vg(x)
+        return f, g * scale                      # scale-free Adam steps
+
+    def run_anchor(a0):
+        x0 = jnp.clip(a0 / u_g, lo, hi)
+
+        def stage(carry, lr):
+            x, bx, bf = carry
+            _, sbx, sbf = _adam_descent(scaled_vg, x, lo, hi, lr=lr,
+                                        n_steps=_OTA_STEPS, track_best=True)
+            bx = jnp.where(sbf < bf, sbx, bx)
+            bf = jnp.minimum(sbf, bf)
+            return (bx, bx, bf), None            # re-anchor at the best
+
+        (_, bx, bf), _ = jax.lax.scan(stage, (x0, x0, obj(x0)),
+                                      jnp.asarray(_OTA_LRS))
+        return bx, bf
+
+    bxs, bfs = jax.vmap(run_anchor)(anchors)
+    i = jnp.argmin(bfs)
+    return bxs[i] * u_g, bfs[i]
+
+
+@functools.lru_cache(maxsize=None)
+def _ota_solver_jit():
+    return jax.jit(jax.vmap(_solve_ota_one))
+
+
+def solve_ota_gamma_batch(lambdas, dim, g_max, e_s, n0, omega_var,
+                          omega_bias, sigma_sq, anchors):
+    """Solve a batch of OTA design problems (15) in one jit.
+
+    Args (leading batch axis B everywhere; N devices, A anchors):
+      lambdas (B, N), dim/g_max/e_s/n0/omega_var/omega_bias (B,),
+      sigma_sq (B, N), anchors (B, A, N) gamma starting points.
+
+    Returns:
+      (gammas, objectives): (B, N) float64 designed pre-scalers and (B,)
+      true objectives (15a) at the physically-coupled points.
+    """
+    with enable_x64():
+        args = [jnp.asarray(np.asarray(a, dtype=np.float64))
+                for a in (lambdas, dim, g_max, e_s, n0, omega_var,
+                          omega_bias, sigma_sq, anchors)]
+        gam, obj = _ota_solver_jit()(*args)
+        return np.asarray(gam), np.asarray(obj)
+
+
+# --------------------------------------------------------- digital (17)
+
+def _solve_digital_one(lambdas, dim, g_max, e_s, n0, bw, t_max, r_max,
+                       wv, wb, s2, anchors):
+    """One digital design point, all anchors: reduced (p, beta, r')."""
+    n = lambdas.shape[0]
+    g2 = g_max ** 2
+    snr_gain = lambdas * e_s / n0
+
+    def latency(nlb_s, r):
+        """Expected latency (12) from nlb_s = -ln(beta_s) (rho^2/Lambda)."""
+        rate = jnp.maximum(jnp.log2(1.0 + snr_gain * nlb_s), 1e-9)
+        payload = 64.0 + dim * (r + 1.0)
+        return jnp.sum(jnp.exp(-nlb_s) * payload / (bw * rate))
+
+    def fit_latency(beta, r):
+        """Raise thresholds (beta -> beta**s) until (17b) holds.
+
+        Same monotone bisection as ``digital_design._fit_latency``, on the
+        log scale nlb = -ln(beta) so beta**s never over/underflows.
+        """
+        nlb = -jnp.log(jnp.clip(beta, 1e-300, 1.0))
+        feasible = latency(nlb, r) <= t_max
+
+        def cond(carry):
+            lo_s, hi_s = carry
+            return (hi_s - lo_s) > 1e-12 * hi_s
+
+        def body(carry):
+            lo_s, hi_s = carry
+            mid = 0.5 * (lo_s + hi_s)
+            bad = latency(mid * nlb, r) > t_max
+            return jnp.where(bad, mid, lo_s), jnp.where(bad, hi_s, mid)
+
+        _, hi_s = jax.lax.while_loop(cond, body, (1.0, 1e6))
+        s = jnp.where(feasible, 1.0, hi_s)       # oracle keeps the hi end
+        return jnp.exp(-s * nlb)
+
+    def true_obj(p, beta, r):
+        """(17a) at integer-relaxed bits r = r'+1 (= oracle convention)."""
+        s = (2.0 ** (r + 1.0) - 1.0) ** 2
+        zeta = (jnp.sum(p ** 2 * g2 * (1.0 / beta - 1.0 + dim / (beta * s)))
+                + jnp.sum(p ** 2 * s2))
+        return wv * zeta + wb * jnp.sum((p - 1.0 / n) ** 2)
+
+    def split(x):
+        return x[:n], x[n:2 * n], x[2 * n:]
+
+    def project(x):
+        """Exact feasibility: simplex p, latency-fitted beta, boxed r."""
+        p, beta, r = split(x)
+        p = simplex_projection_jax(jnp.clip(p, 1e-8, 1.0))
+        p = jnp.clip(p, 1e-10, 1.0)
+        p = p / jnp.sum(p)
+        r = jnp.clip(r, 0.5, r_max - 1.0)
+        beta = fit_latency(jnp.clip(beta, 1e-9, 1.0 - 1e-9), r)
+        return jnp.concatenate([p, beta, r])
+
+    lo = jnp.concatenate([jnp.full(n, 1e-8), jnp.full(n, 1e-6),
+                          jnp.full(n, 0.5)])
+    hi = jnp.concatenate([jnp.ones(n), jnp.full(n, 1.0 - 1e-9),
+                          jnp.full(n, r_max - 1.0)])
+
+    def run_anchor(x0):
+        x0 = project(jnp.clip(x0, lo, hi))
+        p0, b0, r0 = split(x0)
+        f0 = true_obj(p0, b0, r0)
+        scale = 1.0 / jnp.maximum(jnp.abs(f0), 1e-30)
+
+        def pen_obj(x, mu):
+            p, beta, r = split(x)
+            beta = jnp.clip(beta, 1e-9, 1.0 - 1e-9)
+            hinge = jnp.maximum(
+                latency(-jnp.log(beta), r) / t_max - 1.0, 0.0)
+            psum = jnp.sum(p) - 1.0
+            return (scale * true_obj(p, beta, r)
+                    + mu * (hinge ** 2 + psum ** 2))
+
+        def stage(carry, stage_args):
+            mu, lr = stage_args
+            x, bx, bf = carry
+            vg = jax.value_and_grad(lambda y: pen_obj(y, mu))
+            x, _, _ = _adam_descent(vg, x, lo, hi, lr=lr,
+                                    n_steps=_DIG_STEPS, track_best=False)
+            xp = project(x)
+            f = true_obj(*split(xp))
+            bx = jnp.where(f < bf, xp, bx)
+            bf = jnp.minimum(f, bf)
+            return (xp, bx, bf), None
+
+        (_, bx, bf), _ = jax.lax.scan(
+            stage, (x0, x0, f0),
+            (jnp.asarray(_DIG_MUS), jnp.asarray(_DIG_LRS)))
+        return bx, bf
+
+    bxs, bfs = jax.vmap(run_anchor)(anchors)
+    i = jnp.argmin(bfs)
+    return bxs[i], bfs[i]
+
+
+@functools.lru_cache(maxsize=None)
+def _digital_solver_jit():
+    return jax.jit(jax.vmap(_solve_digital_one))
+
+
+def solve_digital_batch(lambdas, dim, g_max, e_s, n0, bandwidth_hz, t_max_s,
+                        r_max, omega_var, omega_bias, sigma_sq, anchors):
+    """Solve a batch of digital design problems (17) in one jit.
+
+    Args (leading batch axis B; N devices, A anchors): lambdas (B, N),
+    scalars (B,), sigma_sq (B, N), anchors (B, A, 3N) packed (p, beta, r').
+
+    Returns:
+      (x, objectives): (B, 3N) feasible packed solutions and (B,) true
+      objectives (17a) at the continuous (integer-relaxed) points —
+      directly comparable to ``design_digital_sca``'s ``SCAResult.objective``.
+    """
+    with enable_x64():
+        args = [jnp.asarray(np.asarray(a, dtype=np.float64))
+                for a in (lambdas, dim, g_max, e_s, n0, bandwidth_hz,
+                          t_max_s, r_max, omega_var, omega_bias, sigma_sq,
+                          anchors)]
+        x, obj = _digital_solver_jit()(*args)
+        return np.asarray(x), np.asarray(obj)

@@ -40,6 +40,29 @@ def test_simplex_projection_idempotent_on_simplex(v):
     np.testing.assert_allclose(p, p0, atol=1e-9)
 
 
+@given(hnp.arrays(np.float64, st.integers(1, 40), elements=finite_floats),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_simplex_projection_order_equivariant(v, seed):
+    """Permuting the input permutes the projection: proj(Pv) == P proj(v)."""
+    perm = np.random.default_rng(seed).permutation(v.shape[0])
+    np.testing.assert_allclose(simplex_projection(v[perm]),
+                               simplex_projection(v)[perm], atol=1e-12)
+
+
+@given(hnp.arrays(np.float64, st.integers(1, 40), elements=finite_floats))
+@settings(max_examples=50, deadline=None)
+def test_simplex_projection_jax_matches_numpy(v):
+    """The batched solver's jnp projection is the numpy rule exactly."""
+    from jax.experimental import enable_x64
+
+    from repro.core.sca_jax import simplex_projection_jax
+
+    with enable_x64():
+        pj = np.asarray(simplex_projection_jax(jnp.asarray(v)))
+    np.testing.assert_allclose(pj, simplex_projection(v), atol=1e-12)
+
+
 @given(hnp.arrays(np.float64, st.integers(1, 200),
                   elements=st.floats(-100, 100, allow_nan=False)),
        st.integers(1, 12), st.integers(0, 2**31 - 1))

@@ -89,6 +89,37 @@ class TestOTA:
         emp = float(np.mean(errs))
         assert emp <= bound * 1.1, (emp, bound)
 
+    def test_true_objective_finite_at_extreme_heterogeneity(self):
+        """exp-overflow guard: gammas past the stationary point of a badly
+        faded device (c_m gamma^2 >> 709) must give a finite (huge)
+        objective, not 0*inf = nan or a ZeroDivisionError."""
+        w = ObjectiveWeights.strongly_convex(eta=0.5, mu=0.01, kappa_sc=3.0,
+                                             n=2)
+        spec = ota_design.OTADesignSpec(
+            lambdas=np.array([1e-6, 1e-13]), dim=100, g_max=20.0,
+            e_s=1e-9, n0=1e-17, weights=w)
+        # uniform gamma at the strong device's stationary point: the weak
+        # device's exponent is ~1e7
+        g_uniform = np.full(2, float(spec.gamma_max().max()))
+        v = ota_design.true_objective_from_gamma(spec, g_uniform)
+        assert np.isfinite(v) and v > 0
+        # fully degenerate: every device far past overflow
+        v_deg = ota_design.true_objective_from_gamma(
+            spec, 50.0 * spec.gamma_max())
+        assert np.isfinite(v_deg)
+        # the guard must not perturb in-range evaluations
+        g_ok = ota_design.anchor_min_noise(spec)
+        a = g_ok * np.exp(-spec.c_m() * g_ok ** 2)
+        p = a / a.sum()
+        expect = (w.omega_var * (np.sum(p ** 2 * spec.g_max ** 2
+                                        * (np.exp(spec.c_m() * g_ok ** 2)
+                                           - 1.0))
+                                 + spec.dim * spec.n0 / a.sum() ** 2)
+                  + w.omega_bias * np.sum((p - 0.5) ** 2))
+        np.testing.assert_allclose(
+            ota_design.true_objective_from_gamma(spec, g_ok), expect,
+            rtol=1e-12)
+
     def test_design_beats_heuristics(self, ota_spec):
         j_mn = ota_design.true_objective_from_gamma(
             ota_spec, ota_design.anchor_min_noise(ota_spec))
