@@ -8,9 +8,14 @@ steady-state speedup, for the OTA schemes AND the digital selection suite
 port). Both backends replay identical random streams, so the max trajectory
 deviation is recorded as a built-in parity check.
 
-    PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.engine_bench [--smoke] [--minibatch]
 
 Writes experiments/results/engine_bench.json.
+
+``--minibatch`` benchmarks the SGD regime (counter-based batch indices
+regenerated in-scan) plus a time-budgeted run — the two options that used
+to force the NumPy fallback. Writes
+experiments/results/engine_bench_minibatch.json.
 
 ``--digital-long`` runs the 1500-round digital horizon through the engine
 alone and records wall-clock + peak RSS — the O(N*d) streaming-dither
@@ -44,6 +49,44 @@ def _time_backend(trainer, agg, backend, *, rounds, trials, eval_every,
     return best, log
 
 
+def _time_suite(trainer, suite, *, trials, eval_every, seed=5,
+                row_prefix="engine_bench", extra=None):
+    """Time every (key, aggregator, rounds) suite entry through both
+    backends (numpy / jax cold / jax warm) with the built-in trajectory
+    parity check; returns the harness CSV rows and the JSON result dicts.
+    ``extra`` merges additional fields (e.g. batch_size) into each dict."""
+    # warm the task's jitted grad/loss functions once so the NumPy timing
+    # measures the backend, not shared first-call compilation
+    trainer.run(suite[0][1], rounds=2, trials=1, eval_every=1, seed=1,
+                backend="numpy")
+    task, dep = trainer.task, trainer.dep
+    rows, results = [], []
+    for key, agg, t_rounds in suite:
+        t_np, log_np = _time_backend(trainer, agg, "numpy", rounds=t_rounds,
+                                     trials=trials, eval_every=eval_every,
+                                     seed=seed)
+        t_cold, _ = _time_backend(trainer, agg, "jax", rounds=t_rounds,
+                                  trials=trials, eval_every=eval_every,
+                                  seed=seed)
+        t_warm, log_jx = _time_backend(trainer, agg, "jax", rounds=t_rounds,
+                                       trials=trials, eval_every=eval_every,
+                                       seed=seed, repeats=2)
+        dev = float(np.max(np.abs(log_np.global_loss - log_jx.global_loss)))
+        res = {
+            "scheme": agg.name, "rounds": t_rounds, "trials": trials,
+            "n_devices": dep.n_devices, "dim": task.dim,
+            "numpy_s": t_np, "jax_cold_s": t_cold, "jax_warm_s": t_warm,
+            "speedup_warm": t_np / t_warm, "speedup_cold": t_np / t_cold,
+            "max_loss_deviation": dev,
+            **(extra or {}),
+        }
+        results.append(res)
+        rows.append((f"{row_prefix}/{key}",
+                     t_warm * 1e6 / max(t_rounds * trials, 1),
+                     f"speedup={res['speedup_warm']:.1f}x;parity={dev:.1e}"))
+    return rows, results
+
+
 def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
         rounds: int = 200, samples_per_device: int = 1000,
         result_name: str = "engine_bench"):
@@ -67,8 +110,12 @@ def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
 
     cfg = dep.cfg
     wargs = (task.dim, task.g_max, cfg.energy_per_symbol, cfg.noise_power)
-    dig_rounds = max(rounds // 4, 1)   # NumPy quantize loop dominates; keep
-    suite = [                          # the digital horizons laptop-sized
+    # NumPy quantize loop dominates; keep the digital horizons laptop-sized.
+    # Snap to the eval grid: the engine only simulates rounds up to the last
+    # eval point, so a non-multiple horizon would bill the NumPy backend for
+    # rounds the engine never runs and inflate the speedup.
+    dig_rounds = max((rounds // 4 // eval_every) * eval_every, eval_every)
+    suite = [
         ("proposed_ota", B.ProposedOTA(params), rounds),
         ("vanilla_ota", B.VanillaOTA(*wargs), rounds),
         ("opc_ota_fl", B.OPCOTAFL(*wargs), rounds),
@@ -79,34 +126,70 @@ def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
         ("uqos", B.UQOS(dep, *wargs, cfg.bandwidth_hz), dig_rounds),
         ("fedtoe", B.FedTOE(dep, *wargs, cfg.bandwidth_hz), dig_rounds),
     ]
-    # warm the task's jitted grad/loss functions once so the NumPy timing
-    # measures the backend, not shared first-call compilation
-    trainer.run(suite[0][1], rounds=2, trials=1, eval_every=1, seed=1,
-                backend="numpy")
-    rows, results = [], []
-    for key, agg, t_rounds in suite:
-        t_np, log_np = _time_backend(trainer, agg, "numpy", rounds=t_rounds,
-                                     trials=trials, eval_every=eval_every,
-                                     seed=5)
-        t_cold, _ = _time_backend(trainer, agg, "jax", rounds=t_rounds,
-                                  trials=trials, eval_every=eval_every,
-                                  seed=5)
-        t_warm, log_jx = _time_backend(trainer, agg, "jax", rounds=t_rounds,
-                                       trials=trials, eval_every=eval_every,
-                                       seed=5, repeats=2)
-        dev = float(np.max(np.abs(log_np.global_loss - log_jx.global_loss)))
-        res = {
-            "scheme": agg.name, "rounds": t_rounds, "trials": trials,
-            "n_devices": n_devices, "dim": task.dim,
-            "numpy_s": t_np, "jax_cold_s": t_cold, "jax_warm_s": t_warm,
-            "speedup_warm": t_np / t_warm, "speedup_cold": t_np / t_cold,
-            "max_loss_deviation": dev,
-        }
-        results.append(res)
-        rows.append((f"engine_bench/{key}",
-                     t_warm * 1e6 / max(t_rounds * trials, 1),
-                     f"speedup={res['speedup_warm']:.1f}x;parity={dev:.1e}"))
+    rows, results = _time_suite(trainer, suite, trials=trials,
+                                eval_every=eval_every)
     payload = {"quick": quick, "results": results}
+    save_result(result_name, payload)
+    return rows, payload
+
+
+def run_minibatch(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
+                  rounds: int = 200, batch_size: int = 64,
+                  samples_per_device: int = 1000,
+                  result_name: str = "engine_bench_minibatch"):
+    """Mini-batch (SGD) engine-vs-NumPy benchmark.
+
+    Stochastic device gradients are the regime the engine used to punt to
+    the NumPy oracle; since the counter-based batch-sampler port it runs
+    in-scan ((N, B) index blocks regenerated per round from a scan-carried
+    threefry key, gathered through the task's device_grads_at path).
+    Records the wall-clock gap and the built-in trajectory-parity check,
+    plus one time-budgeted engine run exercising the in-scan freeze mask.
+    Writes experiments/results/engine_bench_minibatch.json.
+    """
+    if not quick:
+        rounds *= 2
+    eval_every = max(rounds // 20, 1) * 2
+    task, ds, dep, eta_max = make_sc_setup(
+        n_devices, samples_per_device=samples_per_device,
+        n_train_per_class=max((n_devices * samples_per_device) // 10, 200))
+    eta = 0.25 * eta_max
+    params, _ = design_ota(task, dep, eta)
+    dig_params, _ = design_digital(task, dep, eta)
+    trainer = FLTrainer(task, ds, dep, eta=eta,
+                        batch_size=min(batch_size, samples_per_device))
+
+    cfg = dep.cfg
+    wargs = (task.dim, task.g_max, cfg.energy_per_symbol, cfg.noise_power)
+    dig_rounds = max((rounds // 4 // eval_every) * eval_every, eval_every)
+    suite = [
+        ("proposed_ota", B.ProposedOTA(params), rounds),
+        ("vanilla_ota", B.VanillaOTA(*wargs), rounds),
+        ("proposed_digital", B.ProposedDigital(dig_params), dig_rounds),
+        ("best_channel", B.BestChannel(dep, *wargs, cfg.bandwidth_hz),
+         dig_rounds),
+    ]
+    rows, results = _time_suite(trainer, suite, trials=trials,
+                                eval_every=eval_every,
+                                row_prefix="engine_bench_minibatch",
+                                extra={"batch_size": trainer.batch_size})
+    # in-scan time-budget path: freeze after ~60% of the horizon's airtime
+    agg = suite[1][1]
+    budget = 0.6 * rounds * task.dim / cfg.bandwidth_hz
+    t0 = time.perf_counter()
+    log_b = trainer.run(agg, rounds=rounds, trials=trials,
+                        eval_every=eval_every, seed=5,
+                        time_budget_s=budget, backend="jax")
+    t_budget = time.perf_counter() - t0
+    payload = {
+        "quick": quick, "batch_size": trainer.batch_size,
+        "results": results,
+        "time_budget_run": {
+            "scheme": agg.name, "rounds": rounds, "trials": trials,
+            "time_budget_s": budget, "jax_s": t_budget,
+            "frozen_wall_s": float(np.asarray(log_b.wall_time_s)[-1]),
+        },
+    }
     save_result(result_name, payload)
     return rows, payload
 
@@ -160,6 +243,9 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI (N=10, 2 trials, 40 rounds)")
+    ap.add_argument("--minibatch", action="store_true",
+                    help="SGD mini-batch suite (engine in-scan batch "
+                         "sampling vs the NumPy oracle loop)")
     ap.add_argument("--digital-long", action="store_true",
                     help="1500-round digital engine run + peak-RSS record")
     ap.add_argument("--rss-budget-mb", type=float, default=None,
@@ -179,9 +265,17 @@ def main() -> None:
                   file=sys.stderr)
             sys.exit(1)
         return
-    if args.smoke:
+    if args.minibatch:
         # smoke records separately so CI never clobbers the fig2-sized
-        # engine_bench.json artifact
+        # artifacts
+        if args.smoke:
+            rows, payload = run_minibatch(
+                quick=True, n_devices=10, trials=2, rounds=40,
+                batch_size=32, samples_per_device=100,
+                result_name="engine_bench_minibatch_smoke")
+        else:
+            rows, payload = run_minibatch(quick=True)
+    elif args.smoke:
         rows, payload = run(quick=True, n_devices=10, trials=2, rounds=40,
                             samples_per_device=100,
                             result_name="engine_bench_smoke")
@@ -194,6 +288,11 @@ def main() -> None:
               f"{r['max_loss_deviation']:.1e}")
     worst = min(r["speedup_warm"] for r in payload["results"][:2])
     print(f"min OTA steady-state speedup: {worst:.1f}x")
+    if args.minibatch:
+        tb = payload["time_budget_run"]
+        print(f"time-budget run ({tb['scheme']}): froze at "
+              f"{tb['frozen_wall_s']:.3f}s of {tb['time_budget_s']:.3f}s "
+              f"budget in {tb['jax_s']:.2f}s wall")
 
 
 if __name__ == "__main__":

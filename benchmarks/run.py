@@ -10,6 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+import types
 
 
 def main() -> None:
@@ -29,6 +30,10 @@ def main() -> None:
         "roofline": roofline,
         "theorem_validation": theorem_validation,
         "engine_bench": engine_bench,
+        # the SGD mini-batch + time-budget engine suite shares the module
+        # but runs as its own harness entry
+        "engine_bench_minibatch": types.SimpleNamespace(
+            run=engine_bench.run_minibatch),
         "design_bench": design_bench,
         "fig2_ota_sc": fig2_ota_sc,
         "fig2_digital_sc": fig2_digital_sc,

@@ -16,11 +16,13 @@ engine. Both replay identical random streams, so the trajectories match to
               | (core/baselines.py)                | trainer options
     "jax"     | vmap/scan engine (fl/engine.py);   | all 14 paper schemes
               | Pallas epilogue/quantizer/scoring  | (OTA + digital);
-              | kernels; streaming counter-based   | full batch, no time
-              | dither (O(N*d)/round)              | budget
+              | kernels; streaming counter-based   | full batch or SGD
+              | dither + batch indices             | mini-batches; time
+              | (O(N*d)/round)                     | budgets (in-scan
+              |                                    | freeze mask)
     "auto"    | the engine whenever the scheme has | everything (falls
-    (default) | a registered port and the options  | back to NumPy
-              | allow it                           | otherwise)
+    (default) | a registered port                  | back to NumPy
+              |                                    | otherwise)
 """
 import numpy as np
 
@@ -90,6 +92,20 @@ def main():
                           backend="auto")
         acc, _ = log.mean_std("accuracy")
         print(f"{agg.name:25s} accuracy per 20 rounds: {np.round(acc, 3)}")
+
+    # SGD mini-batches + a per-round latency budget, still backend="jax":
+    # batch indices are counter-based (threefry on seed/trial/round/device,
+    # core.rngstream.batch_block) and regenerated inside the engine's scan,
+    # and the budget freezes training in-scan once the cumulative uplink
+    # airtime is spent — both bit-identical to the NumPy oracle loop.
+    sgd = FLTrainer(task, ds, dep, eta=eta, batch_size=32)
+    budget = 50 * task.dim / dep.cfg.bandwidth_hz   # airtime for 50 rounds
+    log = sgd.run(B.ProposedOTA(params), rounds=80, trials=2, eval_every=20,
+                  seed=5, time_budget_s=budget, backend="jax")
+    acc, _ = log.mean_std("accuracy")
+    print(f"\nSGD (|B|=32) under a {budget * 1e3:.0f} ms uplink budget "
+          f"(froze at {np.asarray(log.wall_time_s)[-1] * 1e3:.0f} ms):")
+    print(f"{log.scheme:25s} accuracy per 20 rounds: {np.round(acc, 3)}")
 
 
 if __name__ == "__main__":

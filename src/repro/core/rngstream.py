@@ -19,6 +19,17 @@ backends see bit-identical dither. Uniforms are drawn in float32 and
 widened to float64 by both consumers (exact), keeping the streams equal
 regardless of the oracle's x64-less default config.
 
+Mini-batch sampling follows the same counter-based design: the batch
+indices consumed by device ``m`` in round ``t`` of trial ``trial`` are a
+pure threefry function of ``(seed, trial, t, m)`` (:func:`batch_indices` /
+:func:`batch_block`), drawn without replacement. The NumPy trainer feeds
+them to ``DeviceDataset.batch(..., indices=...)`` (or the stacked
+``task.device_grads_at`` fast path) while the JAX engine regenerates the
+(N, B) block inside its ``lax.scan`` from a scan-carried per-trial key —
+bit-identical batches on both backends, and the sequential trial rng is
+left untouched so the AWGN/selection replay below stays valid whether or
+not mini-batching is on.
+
 Selection randomness (UQOS' sampling permutation/keys, QML's and FedTOE's
 ``rng.choice``) stays on the sequential trial generator — those draws are
 tiny (O(N) per round) and the engine replays them offline with
@@ -36,6 +47,10 @@ import jax.numpy as jnp
 #: Stream tag folded into the dither key so it can never collide with other
 #: derived streams of the same (seed, trial).
 DITHER_TAG = 17
+
+#: Stream tag for the mini-batch index stream (distinct from DITHER_TAG so
+#: the two counter-based streams of a trial never alias).
+BATCH_TAG = 29
 
 
 def dither_base_key(seed: int, trial: int) -> jax.Array:
@@ -70,6 +85,76 @@ def dither_block_np(seed: int, trial: int, t: int, n: int, d: int,
             _key_cache.clear()
         key = _key_cache[ck] = dither_base_key(seed, trial)
     return np.asarray(dither_block(key, t, n, d), dtype=np.float64)
+
+
+def batch_base_key(seed: int, trial: int) -> jax.Array:
+    """Per-trial base key for the mini-batch index stream (threefry)."""
+    key = jax.random.PRNGKey(int(seed) & 0xFFFFFFFF)
+    key = jax.random.fold_in(key, int(trial))
+    return jax.random.fold_in(key, BATCH_TAG)
+
+
+def batch_indices(key: jax.Array, t, m, n_data: int,
+                  batch_size: int) -> jnp.ndarray:
+    """(batch_size,) int32 without-replacement sample of range(n_data) for
+    device ``m`` in round ``t`` (jit/scan-traceable).
+
+    ``key`` is the trial's :func:`batch_base_key`; ``t`` and ``m`` may be
+    traced scalars. The fold order (round, then device) matches
+    :func:`batch_block`, so the block's row ``m`` equals this draw exactly.
+    """
+    km = jax.random.fold_in(jax.random.fold_in(key, t), m)
+    return jax.random.choice(km, n_data, (batch_size,),
+                             replace=False).astype(jnp.int32)
+
+
+def batch_block(key: jax.Array, t, n_devices: int, n_data: int,
+                batch_size: int) -> jnp.ndarray:
+    """(n_devices, batch_size) int32 batch indices for round ``t``.
+
+    Row ``m`` is :func:`batch_indices` for device ``m`` — the engine calls
+    this inside ``lax.scan`` on a scan-carried key, so only one round's
+    block is ever live (O(N*B) memory, mirroring the dither-block design).
+    """
+    kt = jax.random.fold_in(key, t)
+    keys = jax.vmap(lambda m: jax.random.fold_in(kt, m))(
+        jnp.arange(n_devices))
+    return jax.vmap(
+        lambda k: jax.random.choice(k, n_data, (batch_size,), replace=False)
+    )(keys).astype(jnp.int32)
+
+
+def _batch_key_np(seed: int, trial: int, _key_cache: dict = {}) -> jax.Array:
+    ck = (int(seed), int(trial))
+    key = _key_cache.get(ck)
+    if key is None:
+        if len(_key_cache) > 256:
+            _key_cache.clear()
+        key = _key_cache[ck] = batch_base_key(seed, trial)
+    return key
+
+
+def batch_indices_np(seed: int, trial: int, t: int, m: int, n_data: int,
+                     batch_size: int) -> np.ndarray:
+    """Oracle view of :func:`batch_indices` (one device): (B,) int numpy.
+
+    Used by the NumPy trainer when device datasets have unequal sizes and
+    the stacked block path can't apply; keyed on this device's own
+    ``n_data`` so the draw is still a pure counter function.
+    """
+    key = _batch_key_np(seed, trial)
+    return np.asarray(batch_indices(key, t, m, n_data, batch_size))
+
+
+def batch_block_np(seed: int, trial: int, t: int, n_devices: int,
+                   n_data: int, batch_size: int) -> np.ndarray:
+    """Oracle view of :func:`batch_block`: (N, B) int numpy array.
+
+    The base key is memoized per (seed, trial) so the per-round cost in the
+    Python training loop is one fold_in + vmapped choice dispatch.
+    """
+    key = _batch_key_np(seed, trial)
+    return np.asarray(batch_block(key, t, n_devices, n_data, batch_size))
 
 
 def trial_rng(seed: int, trial: int) -> np.random.Generator:

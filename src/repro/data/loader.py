@@ -15,11 +15,30 @@ class DeviceDataset:
     def __len__(self):
         return self.x.shape[0]
 
-    def batch(self, batch_size: Optional[int], rng: np.random.Generator):
-        """Full-batch when batch_size is None (paper Sec. V: |B|=|D|)."""
+    def batch(self, batch_size: Optional[int],
+              rng: Optional[np.random.Generator] = None, *,
+              indices: Optional[np.ndarray] = None):
+        """Full-batch when batch_size is None (paper Sec. V: |B|=|D|).
+
+        Mini-batches are drawn from the counter-based sampler
+        (``core.rngstream.batch_indices_np``) via ``indices`` — the draw the
+        JAX engine regenerates bit-identically inside its scan. Passing a
+        sequential ``rng`` instead is the legacy path (not replayable by the
+        engine) and requires ``indices`` to be None.
+        """
+        if rng is not None and indices is not None:
+            raise ValueError("pass counter-based indices OR a legacy rng, "
+                             "not both (the rng would be silently unused)")
         if batch_size is None or batch_size >= len(self):
             return self.x, self.y
-        idx = rng.choice(len(self), size=batch_size, replace=False)
+        if indices is None:
+            if rng is None:
+                raise ValueError(
+                    "mini-batch draw needs counter-based indices "
+                    "(core.rngstream.batch_indices_np) or a legacy rng")
+            idx = rng.choice(len(self), size=batch_size, replace=False)
+        else:
+            idx = np.asarray(indices)
         return self.x[idx], self.y[idx]
 
 

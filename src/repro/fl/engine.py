@@ -30,7 +30,19 @@ rounds (``tests/test_engine_parity.py``):
   * device-selection draws (UQOS' sampling permutation/keys, QML's and
     FedTOE's ``rng.choice``) stay on the sequential trial rng; each port's
     ``sel_stream_np`` replays them offline into a small (T, S) array that
-    rides into the scan alongside the fading.
+    rides into the scan alongside the fading;
+  * mini-batch indices are counter-based like the dither
+    (``rngstream.batch_block``, threefry keyed on seed/trial/round/device):
+    the engine regenerates each round's (N, B) index block from a
+    scan-carried key and gathers the batches through the task's
+    ``device_grads_at_fn`` — the exact compiled program the NumPy trainer
+    calls on the same indices, so stochastic gradients are bit-identical.
+
+Time budgets run in-scan: cumulative wall-clock rides in the scan carry,
+every round is masked by ``t_wall < budget`` (``jnp.where``), and each eval
+segment reports the last *live* model state — replicating the trainer's
+freeze-at-last-written-eval semantics exactly, including the wall-clock
+pinned at the budget-exhaustion time (``tests/test_trainer_budget.py``).
 
 Model state is carried in float64 (via the scoped x64 context) while local
 gradients/losses are computed in float32 — exactly the NumPy trainer's mixed
@@ -438,16 +450,18 @@ class FLEngine:
 
     One jitted call runs all trials of all rounds: fading/noise/selection
     draws come in as batched (trials, T, ...) tensors, quantization dither
-    streams from a scan-carried per-trial key (O(N*d) per round), rounds
-    advance under a two-level ``lax.scan`` (outer: eval segments, inner:
-    rounds) so only the model states at eval points are materialized, and
-    trials are batched with ``vmap`` — including through the Pallas epilogue
-    kernels — or laid over devices with ``shard_map`` when
-    ``shard_trials=True``.
+    and mini-batch indices stream from scan-carried per-trial keys (O(N*d)
+    per round), rounds advance under a two-level ``lax.scan`` (outer: eval
+    segments, inner: rounds) so only the model states at eval points are
+    materialized, time budgets freeze the carry in-scan once the cumulative
+    wall-clock is spent, and trials are batched with ``vmap`` — including
+    through the Pallas epilogue kernels — or laid over devices with
+    ``shard_map`` when ``shard_trials=True``.
     """
 
     def __init__(self, task, dataset, deployment: Deployment, eta: float, *,
                  project_radius: Optional[float] = None,
+                 batch_size: Optional[int] = None,
                  use_kernel: bool = True, shard_trials: bool = False):
         self.task = task
         self.ds = dataset
@@ -456,6 +470,12 @@ class FLEngine:
         self.project_radius = project_radius
         self.use_kernel = use_kernel
         self.shard_trials = shard_trials
+        sizes = {len(d) for d in dataset.devices}
+        if len(sizes) != 1:
+            raise ValueError(
+                "FLEngine stacks device datasets: all devices must hold the "
+                f"same number of samples (got sizes {sorted(sizes)})")
+        self.batch_size = self.effective_batch_size(batch_size, sizes.pop())
         self.xs = np.stack([d.x for d in dataset.devices]).astype(np.float32)
         self.ys = np.stack([d.y for d in dataset.devices]).astype(np.int32)
         self.x_all = np.concatenate(
@@ -469,6 +489,15 @@ class FLEngine:
         self._acc_v = jax.jit(jax.vmap(task.accuracy_fn,
                                        in_axes=(0, None, None)))
 
+    @staticmethod
+    def effective_batch_size(batch_size: Optional[int],
+                             n_data: int) -> Optional[int]:
+        """batch_size >= |D_m| is full-batch (DeviceDataset.batch
+        semantics). The single normalization rule shared with the trainer's
+        engine-cache comparison."""
+        return (None if batch_size is not None and batch_size >= n_data
+                else batch_size)
+
     # ------------------------------------------------------- scan runner
 
     def _get_runner(self, jagg: JaxAggregator, trials: int, n_seg: int,
@@ -476,25 +505,43 @@ class FLEngine:
         d, N = self.task.dim, self.dep.n_devices
         # the task object itself keys (and pins) the gradient function;
         # everything else closed over by trial_fn is shape-static, and all
-        # run-varying scalars (eta, radius, lat_scale) are traced arguments
+        # run-varying scalars (eta, radius, lat_div, budget) are traced
+        # arguments
         key = (self.task, trials, n_seg, eval_every, d, N,
-               self.xs.shape, self.use_kernel, self.shard_trials)
+               self.xs.shape, self.batch_size, self.use_kernel,
+               self.shard_trials)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
-        grads_fn = self.task.device_grads_fn
+        batch_size = self.batch_size
+        n_data = self.xs.shape[1]
+        grads_fn = (self.task.device_grads_fn if batch_size is None
+                    else self.task.device_grads_at_fn)
         round_fn = jagg.round_fn
         needs_dither = jagg.needs_dither
 
-        def trial_fn(w0, eta, radius, lat_scale, xs, ys, key, H, Z, SEL, Ts):
-            # key: scan-carried per-trial dither key; H: (n_seg, eval_every,
-            # N) complex; Z: (n_seg, eval_every, dz); SEL: (n_seg,
-            # eval_every, S); Ts: (n_seg, eval_every)
+        def trial_fn(w0, eta, radius, lat_div, budget, xs, ys, dkey, bkey,
+                     H, Z, SEL, Ts):
+            # dkey/bkey: scan-carried per-trial dither / batch-index keys;
+            # H: (n_seg, eval_every, N) complex; Z: (n_seg, eval_every, dz);
+            # SEL: (n_seg, eval_every, S); Ts: (n_seg, eval_every)
             def step(carry, inp):
-                w, t_wall, dkey = carry
+                w, t_wall, _, dkey, bkey = carry
                 h, z, selrow, t = inp
-                g = grads_fn(w.astype(jnp.float32), xs, ys
-                             ).astype(jnp.float64)
+                # the trainer breaks on the first round whose *preceding*
+                # cumulative wall-clock hit the budget; past that round the
+                # carry freezes (w and t_wall stop advancing)
+                active = t_wall < budget
+                if batch_size is None:
+                    g = grads_fn(w.astype(jnp.float32), xs, ys
+                                 ).astype(jnp.float64)
+                else:
+                    # (N, B) counter-based indices regenerated in-scan —
+                    # bit-identical to the oracle's batch_block_np draw
+                    idx = rngstream.batch_block(bkey, t, N, n_data,
+                                                batch_size)
+                    g = grads_fn(w.astype(jnp.float32), xs, ys, idx
+                                 ).astype(jnp.float64)
                 if needs_dither:
                     # one (N, d) block regenerated per round — the whole
                     # dither stream never exists in memory at once
@@ -502,15 +549,25 @@ class FLEngine:
                 else:
                     u = jnp.zeros((1, 1), jnp.float32)
                 ghat, lat = round_fn(g, h, z, u, selrow, t)
-                w_new = _project(w - eta * ghat, radius)
-                return (w_new, t_wall + lat * lat_scale, dkey), None
+                # division (not reciprocal-multiply) so OTA wall-clock is
+                # bit-equal to the trainer's ``latency_s / bandwidth`` and
+                # budget comparisons freeze on the same round
+                w_new = jnp.where(active, _project(w - eta * ghat, radius), w)
+                t_wall = jnp.where(active, t_wall + lat / lat_div, t_wall)
+                return (w_new, t_wall, active, dkey, bkey), None
 
             def segment(carry, seg_inp):
-                out, _ = jax.lax.scan(step, carry, seg_inp)
-                (w, t_wall, _) = out
-                return out, (w, t_wall)
+                w_eval, inner = carry[0], carry[1:]
+                inner, _ = jax.lax.scan(step, inner, seg_inp)
+                (w, t_wall, live, _, _) = inner
+                # the eval at this segment's end is written by the trainer
+                # iff the segment's last round still ran; otherwise the slot
+                # freezes at the last written eval state
+                w_eval = jnp.where(live, w, w_eval)
+                return (w_eval,) + inner, (w_eval, t_wall)
 
-            carry0 = (w0, jnp.zeros((), jnp.float64), key)
+            carry0 = (w0, w0, jnp.zeros((), jnp.float64),
+                      jnp.asarray(True), dkey, bkey)
             _, (ws, walls) = jax.lax.scan(segment, carry0, (H, Z, SEL, Ts))
             ws = jnp.concatenate([w0[None], ws], axis=0)          # (E, d)
             walls = jnp.concatenate([jnp.zeros((1,)), walls], axis=0)
@@ -518,7 +575,8 @@ class FLEngine:
 
         vmapped = jax.vmap(
             trial_fn,
-            in_axes=(None, None, None, None, None, None, 0, 0, 0, 0, None))
+            in_axes=(None, None, None, None, None, None, None,
+                     0, 0, 0, 0, 0, None))
         if self.shard_trials:
             from ..compat import shard_map as shard_map_compat
             n_hw = len(jax.devices())
@@ -530,9 +588,9 @@ class FLEngine:
             P = jax.sharding.PartitionSpec
             vmapped = shard_map_compat(
                 vmapped, mesh,
-                in_specs=(P(), P(), P(), P(), P(), P(),
+                in_specs=(P(), P(), P(), P(), P(), P(), P(),
                           P("trials"), P("trials"), P("trials"), P("trials"),
-                          P()),
+                          P("trials"), P()),
                 out_specs=(P("trials"), P("trials")),
                 manual_axes=("trials",))
         runner = jax.jit(vmapped)
@@ -543,7 +601,8 @@ class FLEngine:
 
     def run(self, aggregator, *, rounds: int, trials: int = 3,
             eval_every: int = 10, seed: int = 0,
-            w_star: Optional[np.ndarray] = None) -> TrainLog:
+            w_star: Optional[np.ndarray] = None,
+            time_budget_s: Optional[float] = None) -> TrainLog:
         jagg = as_functional(aggregator, use_kernel=self.use_kernel)
         if jagg is None:
             raise ValueError(
@@ -569,6 +628,8 @@ class FLEngine:
             SEL = np.zeros((trials, T, 1))
         keys = jnp.stack([rngstream.dither_base_key(seed, tr)
                           for tr in range(trials)])
+        bkeys = jnp.stack([rngstream.batch_base_key(seed, tr)
+                           for tr in range(trials)])
 
         with enable_x64():
             runner = self._get_runner(jagg, trials, n_seg, eval_every)
@@ -577,15 +638,18 @@ class FLEngine:
             radius = jnp.asarray(
                 np.inf if self.project_radius is None else self.project_radius,
                 jnp.float64)
-            lat_scale = jnp.asarray(
-                1.0 / self.dep.cfg.bandwidth_hz if jagg.is_ota else 1.0,
+            lat_div = jnp.asarray(
+                self.dep.cfg.bandwidth_hz if jagg.is_ota else 1.0,
+                jnp.float64)
+            budget = jnp.asarray(
+                np.inf if time_budget_s is None else time_budget_s,
                 jnp.float64)
             seg = lambda a: jnp.asarray(a).reshape(
                 (trials, n_seg, eval_every) + a.shape[2:])
             Ts = jnp.arange(T).reshape(n_seg, eval_every)
-            ws, walls = runner(w0, eta, radius, lat_scale,
+            ws, walls = runner(w0, eta, radius, lat_div, budget,
                                jnp.asarray(self.xs), jnp.asarray(self.ys),
-                               keys, seg(H), seg(Z), seg(SEL), Ts)
+                               keys, bkeys, seg(H), seg(Z), seg(SEL), Ts)
             losses, accs = self._evaluate(ws)
             opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
                        if w_star is not None else None)

@@ -34,6 +34,17 @@ def _clip_to(g: jnp.ndarray, g_max: float) -> jnp.ndarray:
     return g * jnp.minimum(1.0, g_max / jnp.maximum(nrm, 1e-12))
 
 
+def _device_grad_at(device_grad):
+    """Mini-batch view of a per-device gradient: gather the batch rows by
+    index inside the jit, then run the same clipped-gradient program. Both
+    simulation backends call this one compiled function (vmapped over the
+    device axis, gradients vmapped over the gathered batch axis), so their
+    stochastic gradients are bit-identical given identical indices."""
+    def grad_at(w_flat, x, y, idx):
+        return device_grad(w_flat, x[idx], y[idx])
+    return grad_at
+
+
 class SoftmaxRegressionTask:
     """phi(w,(x,l)) = mu/2 ||w||^2 - log softmax_l(x^T W); strongly convex."""
 
@@ -61,6 +72,8 @@ class SoftmaxRegressionTask:
 
         self._device_grads = jax.jit(jax.vmap(device_grad, in_axes=(None, 0, 0)))
         self._device_losses = jax.jit(jax.vmap(loss, in_axes=(None, 0, 0)))
+        self._device_grads_at = jax.jit(
+            jax.vmap(_device_grad_at(device_grad), in_axes=(None, 0, 0, 0)))
 
         def acc(w_flat, x, y):
             W = w_flat.reshape(n_classes, n_features + 1)
@@ -87,10 +100,23 @@ class SoftmaxRegressionTask:
         """Jitted vmapped per-device clipped gradient (w32, xs, ys) -> (N,d)."""
         return self._device_grads
 
+    @property
+    def device_grads_at_fn(self):
+        """Jitted mini-batch gradient (w32, xs (N,n,f), ys, idx (N,B)) ->
+        (N,d): gathers each device's batch by index, then the clipped grad."""
+        return self._device_grads_at
+
     def device_grads(self, w, xs, ys):
         """xs: (N, n, feat), ys: (N, n) stacked device batches."""
         g = self._device_grads(jnp.asarray(w, jnp.float32),
                                jnp.asarray(xs), jnp.asarray(ys))
+        return np.asarray(g, dtype=np.float64)
+
+    def device_grads_at(self, w, xs, ys, idx):
+        """Mini-batch gradients on stacked full data + (N, B) indices."""
+        g = self._device_grads_at(jnp.asarray(w, jnp.float32),
+                                  jnp.asarray(xs), jnp.asarray(ys),
+                                  jnp.asarray(idx))
         return np.asarray(g, dtype=np.float64)
 
     def device_losses(self, w, xs, ys):
@@ -146,6 +172,8 @@ class MLPTask:
             return _clip_to(grad1(w_flat, x, y), g_max)
 
         self._device_grads = jax.jit(jax.vmap(device_grad, in_axes=(None, 0, 0)))
+        self._device_grads_at = jax.jit(
+            jax.vmap(_device_grad_at(device_grad), in_axes=(None, 0, 0, 0)))
 
         def acc(w_flat, x, y):
             W1, b1, W2, b2 = unpack(w_flat)
@@ -182,9 +210,22 @@ class MLPTask:
         """Jitted vmapped per-device clipped gradient (w32, xs, ys) -> (N,d)."""
         return self._device_grads
 
+    @property
+    def device_grads_at_fn(self):
+        """Jitted mini-batch gradient (w32, xs (N,n,f), ys, idx (N,B)) ->
+        (N,d): gathers each device's batch by index, then the clipped grad."""
+        return self._device_grads_at
+
     def device_grads(self, w, xs, ys):
         g = self._device_grads(jnp.asarray(w, jnp.float32),
                                jnp.asarray(xs), jnp.asarray(ys))
+        return np.asarray(g, dtype=np.float64)
+
+    def device_grads_at(self, w, xs, ys, idx):
+        """Mini-batch gradients on stacked full data + (N, B) indices."""
+        g = self._device_grads_at(jnp.asarray(w, jnp.float32),
+                                  jnp.asarray(xs), jnp.asarray(ys),
+                                  jnp.asarray(idx))
         return np.asarray(g, dtype=np.float64)
 
     def global_loss(self, w, x, y) -> float:

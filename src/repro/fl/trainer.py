@@ -4,7 +4,9 @@ aggregation -> projected SGD step, with Monte-Carlo trials over fading/noise.
 Matches Sec. V's protocol:
   * fixed device deployment (fixed {Lambda_m}) across trials,
   * independent fading + PS noise per trial,
-  * full-batch local gradients (|B| = |D|, sigma_m = 0),
+  * full-batch local gradients (|B| = |D|, sigma_m = 0) by default, or SGD
+    mini-batches via ``batch_size`` (counter-based index draws shared
+    bit-for-bit with the JAX engine),
   * projection onto the ball W = {||w|| <= D/2} in the strongly convex case,
   * per-round latency accounting (OTA: d/B; digital: realized TDMA time).
 """
@@ -49,10 +51,19 @@ class FLTrainer:
         self.project_radius = project_radius
         self.batch_size = batch_size
         self._engine = None
-        # stack device data once (full-batch path): (N, n, feat)
-        if batch_size is None:
+        # stack device data once whenever sizes allow: (N, n, feat). The
+        # stacked view serves the full-batch path AND the counter-based
+        # mini-batch fast path (task.device_grads_at on a (N, B) index
+        # block); unequal-sized devices fall back to per-device gathers.
+        if len({len(d) for d in dataset.devices}) == 1:
             self.xs = np.stack([d.x for d in dataset.devices])
             self.ys = np.stack([d.y for d in dataset.devices])
+        else:
+            if batch_size is None:
+                raise ValueError(
+                    "full-batch training needs equal-sized device datasets "
+                    "(stacked (N, n, feat) gradients); set batch_size")
+            self.xs = self.ys = None
 
     def _project(self, w: np.ndarray) -> np.ndarray:
         if self.project_radius is None:
@@ -70,34 +81,44 @@ class FLTrainer:
         """Run the Monte-Carlo FL protocol.
 
         backend: "numpy" — reference Python-loop path; "jax" — vectorized
-        vmap/scan engine (``fl.engine``), errors if the scheme/options have
-        no JAX port; "auto" (default) — the engine when supported (full
-        batch, no time budget, scheme registered in the engine's port
-        routing table — all 14 paper baselines are), NumPy otherwise. Both
-        backends replay the same random streams, so trajectories agree to
-        ~1e-5 (tests/test_engine_parity.py).
+        vmap/scan engine (``fl.engine``), errors if the scheme has no JAX
+        port; "auto" (default) — the engine whenever the scheme is
+        registered in its port routing table (all 14 paper baselines are),
+        NumPy otherwise. Mini-batching and time budgets run natively in the
+        engine: batch indices are counter-based (``core.rngstream``) and the
+        budget-freeze mask is evaluated in-scan, so both backends replay the
+        same random streams and trajectories agree to ~1e-5
+        (tests/test_engine_parity.py).
         """
         if backend not in ("auto", "jax", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend != "numpy":
             from .engine import FLEngine, as_functional
-            supported = (self.batch_size is None and time_budget_s is None
-                         and as_functional(aggregator) is not None)
+            supported = (as_functional(aggregator) is not None
+                         and (self.batch_size is None or self.xs is not None))
             if supported:
+                # normalized like FLEngine (batch_size >= |D_m| is full
+                # batch) so the degenerate case still reuses the cache
+                bs = FLEngine.effective_batch_size(self.batch_size,
+                                                   self.xs.shape[1])
                 if (self._engine is None
                         or self._engine.eta != self.eta
-                        or self._engine.project_radius != self.project_radius):
+                        or self._engine.project_radius != self.project_radius
+                        or self._engine.batch_size != bs):
                     self._engine = FLEngine(
                         self.task, self.ds, self.dep, self.eta,
-                        project_radius=self.project_radius)
+                        project_radius=self.project_radius,
+                        batch_size=bs)
                 return self._engine.run(aggregator, rounds=rounds,
                                         trials=trials, eval_every=eval_every,
-                                        seed=seed, w_star=w_star)
+                                        seed=seed, w_star=w_star,
+                                        time_budget_s=time_budget_s)
             if backend == "jax":
                 raise ValueError(
                     f"backend='jax' unsupported here: scheme "
                     f"{type(aggregator).__name__} has no JAX port, or "
-                    "mini-batching/time budgets are in use")
+                    "mini-batching with unequal-sized device datasets "
+                    "(the engine stacks device data)")
         eval_rounds = list(range(0, rounds + 1, eval_every))
         losses = np.zeros((trials, len(eval_rounds)))
         accs = np.zeros((trials, len(eval_rounds)))
@@ -136,16 +157,34 @@ class FLTrainer:
                         if opt_err is not None:
                             opt_err[trial, j] = opt_err[trial, last]
                     break
+                # mini-batch indices are counter-based (threefry on
+                # (seed, trial, t, m), core.rngstream) so the JAX engine
+                # regenerates bit-identical batches in-scan, and the
+                # sequential trial rng stays reserved for AWGN/selection
                 if self.batch_size is None:
-                    xs, ys = self.xs, self.ys
+                    grads = self.task.device_grads(w, self.xs, self.ys)
+                elif (self.xs is not None
+                      and self.batch_size < self.xs.shape[1]):
+                    idx = rngstream.batch_block_np(
+                        seed, trial, t, self.dep.n_devices,
+                        self.xs.shape[1], self.batch_size)
+                    grads = self.task.device_grads_at(w, self.xs, self.ys,
+                                                      idx)
+                elif self.xs is not None:
+                    # batch_size >= |D_m|: full batch, no draw consumed
+                    grads = self.task.device_grads(w, self.xs, self.ys)
                 else:
                     bx, by = [], []
-                    for d in self.ds.devices:
-                        x_b, y_b = d.batch(self.batch_size, rng)
+                    for m, d in enumerate(self.ds.devices):
+                        ind = (rngstream.batch_indices_np(
+                                   seed, trial, t, m, len(d),
+                                   self.batch_size)
+                               if self.batch_size < len(d) else None)
+                        x_b, y_b = d.batch(self.batch_size, indices=ind)
                         bx.append(x_b)
                         by.append(y_b)
-                    xs, ys = np.stack(bx), np.stack(by)
-                grads = self.task.device_grads(w, xs, ys)
+                    grads = self.task.device_grads(w, np.stack(bx),
+                                                   np.stack(by))
                 h = fading.sample(t)
                 # digital schemes consume counter-based dither (one (N, d)
                 # block per round, bit-replayable by the JAX engine); OTA

@@ -97,6 +97,10 @@ def _cfg_args(setup):
             dep.cfg.noise_power)
 
 
+MB_ROUNDS = 20          # mini-batch parity horizon (small T, per the suite)
+MB_BATCH = 32           # of 100 samples/device
+
+
 #: name -> factory(setup) covering the 8 schemes ported in the full-suite
 #: engine refactor (the original 6 keep their dedicated tests below)
 SCHEME_FACTORIES = {
@@ -113,6 +117,21 @@ SCHEME_FACTORIES = {
     "qml": lambda s: B.QML(s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
     "fedtoe": lambda s: B.FedTOE(s[2], *_cfg_args(s), s[2].cfg.bandwidth_hz),
 }
+
+
+#: name -> factory(setup, ota_params, dig_params): EVERY scheme registered
+#: in the engine's port routing table (the designed Proposed* schemes need
+#: the module-scoped design fixtures, hence the wider signature)
+ALL_SCHEME_FACTORIES = dict(
+    ideal_fedavg=lambda s, op, dp: B.IdealFedAvg(),
+    proposed_ota=lambda s, op, dp: B.ProposedOTA(op),
+    vanilla_ota=lambda s, op, dp: B.VanillaOTA(*_cfg_args(s)),
+    opc_ota_comp=lambda s, op, dp: B.OPCOTAComp(*_cfg_args(s)),
+    lcpc_ota_comp=lambda s, op, dp: B.LCPCOTAComp(s[2], *_cfg_args(s)),
+    proposed_digital=lambda s, op, dp: B.ProposedDigital(dp),
+    **{k: (lambda f: lambda s, op, dp: f(s))(f)
+       for k, f in SCHEME_FACTORIES.items()},
+)
 
 
 class _UnportedAggregator(B.Aggregator):
@@ -189,6 +208,122 @@ class TestTrajectoryParity:
             log_jx = tr.run(agg, rounds=10, trials=1, eval_every=5, seed=3,
                             backend="jax")
             _assert_logs_match(log_np, log_jx)
+
+
+class TestMiniBatchParity:
+    """SGD mini-batch runs through the engine: counter-based batch indices
+    (threefry on seed/trial/round/device) are regenerated inside the scan
+    and gathered through the task's device_grads_at path — the exact program
+    the NumPy oracle runs, so trajectories match for every registered
+    scheme."""
+
+    @pytest.mark.parametrize("scheme", sorted(ALL_SCHEME_FACTORIES))
+    def test_minibatch_full_suite(self, setup, ota_params, dig_params,
+                                  scheme):
+        task, ds, dep, eta, _ = setup
+        agg = ALL_SCHEME_FACTORIES[scheme](setup, ota_params, dig_params)
+        tr = FLTrainer(task, ds, dep, eta=eta, batch_size=MB_BATCH)
+        log_np = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="numpy")
+        log_jx = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="jax")
+        _assert_logs_match(log_np, log_jx)
+
+    def test_minibatch_actually_subsamples(self, setup):
+        """A mini-batch run must differ from the full-batch trajectory
+        (guards against the sampler silently returning the full dataset)."""
+        task, ds, dep, eta, _ = setup
+        agg = B.IdealFedAvg()
+        log_mb = FLTrainer(task, ds, dep, eta=eta, batch_size=MB_BATCH).run(
+            agg, rounds=MB_ROUNDS, trials=1, eval_every=EVAL_EVERY, seed=5,
+            backend="jax")
+        log_fb = FLTrainer(task, ds, dep, eta=eta).run(
+            agg, rounds=MB_ROUNDS, trials=1, eval_every=EVAL_EVERY, seed=5,
+            backend="jax")
+        assert not np.allclose(log_mb.global_loss[:, -1],
+                               log_fb.global_loss[:, -1], rtol=1e-12)
+
+    def test_batch_size_covering_dataset_is_full_batch(self, setup):
+        """batch_size >= |D_m| degrades to the full-batch path in both
+        backends (DeviceDataset.batch semantics) — and stays in parity."""
+        task, ds, dep, eta, _ = setup
+        agg = B.IdealFedAvg()
+        tr = FLTrainer(task, ds, dep, eta=eta, batch_size=10 ** 6)
+        log_np = tr.run(agg, rounds=MB_ROUNDS, trials=1,
+                        eval_every=EVAL_EVERY, seed=5, backend="numpy")
+        log_jx = tr.run(agg, rounds=MB_ROUNDS, trials=1,
+                        eval_every=EVAL_EVERY, seed=5, backend="jax")
+        _assert_logs_match(log_np, log_jx)
+        log_fb = FLTrainer(task, ds, dep, eta=eta).run(
+            agg, rounds=MB_ROUNDS, trials=1, eval_every=EVAL_EVERY, seed=5,
+            backend="jax")
+        np.testing.assert_allclose(log_jx.global_loss, log_fb.global_loss,
+                                   **TOL)
+
+    def test_auto_routes_minibatch_through_engine(self, setup):
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta, batch_size=MB_BATCH)
+        tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2, seed=0)
+        assert tr._engine is not None
+        assert tr._engine.batch_size == MB_BATCH
+
+
+class TestTimeBudgetParity:
+    """Per-round latency budgets run in-scan: cumulative wall-clock in the
+    scan carry, a freeze mask past exhaustion, and eval slots reporting the
+    last *live* state — same freeze round and frozen values as the trainer's
+    break-and-copy loop."""
+
+    def _run_budget_both(self, setup, agg, budget, *, batch_size=None,
+                         rounds=12, eval_every=4):
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta, batch_size=batch_size)
+        log_np = tr.run(agg, rounds=rounds, trials=TRIALS,
+                        eval_every=eval_every, seed=0, time_budget_s=budget,
+                        backend="numpy")
+        log_jx = tr.run(agg, rounds=rounds, trials=TRIALS,
+                        eval_every=eval_every, seed=0, time_budget_s=budget,
+                        backend="jax")
+        return log_np, log_jx
+
+    def test_budget_freeze_parity_ota(self, setup):
+        """Budget trips between eval grid points: identical freeze round
+        (wall-clock pinned at the same exhaustion time) and frozen evals."""
+        task, _, dep, _, _ = setup
+        agg = B.VanillaOTA(*_cfg_args(setup))
+        per_round = task.dim / dep.cfg.bandwidth_hz
+        log_np, log_jx = self._run_budget_both(setup, agg, 5.5 * per_round)
+        _assert_logs_match(log_np, log_jx)
+        # the budget (airtime for 5.5 rounds) froze after round 6: slots at
+        # t=8,12 replicate the t=4 eval, wall pinned at 6 rounds of airtime
+        assert np.all(log_jx.global_loss[:, 2:]
+                      == log_jx.global_loss[:, 1:2])
+        np.testing.assert_allclose(np.asarray(log_jx.wall_time_s)[2:],
+                                   6 * per_round, rtol=1e-12)
+
+    def test_budget_freeze_parity_digital(self, setup, dig_params):
+        """Digital schemes spend *realized* TDMA latency: the freeze round
+        is data-dependent, and both backends must agree on it."""
+        log_np, log_jx = self._run_budget_both(
+            setup, B.ProposedDigital(dig_params), 0.05, rounds=16)
+        _assert_logs_match(log_np, log_jx)
+
+    def test_budget_with_minibatch_combined(self, setup):
+        """The two new engine paths compose: SGD mini-batches under a
+        latency budget stay in parity."""
+        task, _, dep, _, _ = setup
+        agg = B.VanillaOTA(*_cfg_args(setup))
+        per_round = task.dim / dep.cfg.bandwidth_hz
+        log_np, log_jx = self._run_budget_both(
+            setup, agg, 5.5 * per_round, batch_size=MB_BATCH)
+        _assert_logs_match(log_np, log_jx)
+
+    def test_auto_routes_budget_through_engine(self, setup):
+        task, ds, dep, eta, _ = setup
+        tr = FLTrainer(task, ds, dep, eta=eta)
+        tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2, seed=0,
+               time_budget_s=1e9)
+        assert tr._engine is not None
 
 
 class TestGreedyBitAlloc:

@@ -11,6 +11,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 
+from repro.core import rngstream
 from repro.core.sca import simplex_projection
 from repro.core.quantize import quantize_np, quantization_variance_bound
 from repro.core.channel import participation_probability
@@ -109,6 +110,53 @@ def test_bias_sum_nonnegative_and_zero_iff_uniform(p):
     n = p.shape[0]
     if np.allclose(p, 1.0 / n, atol=1e-12):
         assert b < 1e-12
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 7), st.integers(0, 300),
+       st.integers(1, 5), st.integers(1, 24), st.integers(1, 24))
+@settings(max_examples=15, deadline=None)
+def test_batch_sampler_np_jax_bit_identical(seed, trial, t, n_devices,
+                                            n_data, batch_hint):
+    """The counter-based mini-batch sampler (threefry on
+    seed/trial/round/device) draws bit-identical index blocks through the
+    NumPy oracle view, the jitted in-scan regeneration with a traced round
+    index (what the engine's lax.scan does), and the per-device fold —
+    in-range and without replacement."""
+    batch_size = min(batch_hint, n_data)
+    block = rngstream.batch_block_np(seed, trial, t, n_devices, n_data,
+                                     batch_size)
+    assert block.shape == (n_devices, batch_size)
+    key = rngstream.batch_base_key(seed, trial)
+    jitted = jax.jit(rngstream.batch_block, static_argnums=(2, 3, 4))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(key, jnp.asarray(t), n_devices, n_data,
+                          batch_size)), block)
+    for m in (0, n_devices - 1):
+        np.testing.assert_array_equal(
+            rngstream.batch_indices_np(seed, trial, t, m, n_data,
+                                       batch_size), block[m])
+    assert block.min() >= 0 and block.max() < n_data
+    for row in block:
+        assert len(set(row.tolist())) == batch_size   # replace=False
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 7), st.integers(0, 300))
+@settings(max_examples=15, deadline=None)
+def test_batch_sampler_folds_independent(seed, trial, t):
+    """Adjacent (trial, round, device) key folds give distinct draws (the
+    sample space 1000-choose-16 makes a collision a fold-aliasing bug), and
+    the batch stream never aliases the dither stream of the same trial."""
+    n_data, bs = 1000, 16
+    base = rngstream.batch_indices_np(seed, trial, t, 0, n_data, bs)
+    assert not np.array_equal(
+        base, rngstream.batch_indices_np(seed, trial, t, 1, n_data, bs))
+    assert not np.array_equal(
+        base, rngstream.batch_indices_np(seed, trial, t + 1, 0, n_data, bs))
+    assert not np.array_equal(
+        base, rngstream.batch_indices_np(seed, trial + 1, t, 0, n_data, bs))
+    assert not np.array_equal(
+        rngstream.batch_base_key(seed, trial),
+        rngstream.dither_base_key(seed, trial))
 
 
 @given(st.integers(1, 3), st.integers(1, 300), st.integers(1, 150),
