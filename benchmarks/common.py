@@ -1,13 +1,18 @@
-"""Shared benchmark scaffolding: experiment setups mirroring Sec. V."""
+"""Shared benchmark scaffolding, thinned to delegates over ``repro.api``.
+
+The per-figure pipeline logic (setup -> kappa -> design -> tuned runs ->
+serialize) now lives in the declarative scenario layer
+(``repro.api.materialize`` / ``repro.api.execute``); this module keeps the
+benchmark-facing helpers — experiment setups mirroring Sec. V, design
+routing for the engine benchmarks, and schema-stamped result saving — as
+thin wrappers so the bench harnesses stay terse.
+"""
 from __future__ import annotations
 
-import dataclasses
-import json
-import time
-from pathlib import Path
-
-import numpy as np
-
+from repro.api.materialize import (estimate_kappa_nc, estimate_kappa_sc,
+                                   tune_and_run)
+from repro.api.results import (DEFAULT_RESULTS_ROOT, SCHEMA_VERSION,
+                               dump_json, log_record, result_payload)
 from repro.core.channel import WirelessConfig, make_deployment
 from repro.core.bounds import ObjectiveWeights
 from repro.core import ota_design, digital_design
@@ -16,30 +21,46 @@ from repro.data.synthetic import SyntheticSpec, make_classification_dataset
 from repro.data.partition import partition_by_class
 from repro.data.loader import FLDataset
 from repro.fl.tasks import SoftmaxRegressionTask, MLPTask
-from repro.fl.trainer import FLTrainer
 
-RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "results"
+__all__ = [
+    "RESULTS_DIR", "save_result", "log_to_dict", "figure_rows_and_logs",
+    "result_payload", "make_sc_setup", "make_nc_setup",
+    "estimate_kappa_sc", "estimate_kappa_nc", "design_ota",
+    "design_ota_nc", "design_digital", "run_tuned", "ota_baseline_suite",
+    "digital_baseline_suite",
+]
+
+# one results root for the whole repo (honors REPRO_RESULTS_DIR, like the
+# scenario layer's ResultSet directories)
+RESULTS_DIR = DEFAULT_RESULTS_ROOT
 
 
 def save_result(name: str, payload: dict):
+    """Write a schema-stamped payload through the strict encoder.
+
+    Unknown object types raise (``repro.api.results.json_default``) —
+    the legacy ``default=float`` silently coerced them.
+    """
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    (RESULTS_DIR / f"{name}.json").write_text(
-        json.dumps(payload, indent=1, default=float))
+    payload = dict(payload)
+    payload.setdefault("schema_version", SCHEMA_VERSION)
+    (RESULTS_DIR / f"{name}.json").write_text(dump_json(payload))
 
 
 def log_to_dict(log):
-    d = {
-        "scheme": log.scheme,
-        "rounds": log.rounds.tolist(),
-        "wall_time_s": np.asarray(log.wall_time_s).tolist(),
-        "loss_mean": log.global_loss.mean(0).tolist(),
-        "loss_std": log.global_loss.std(0).tolist(),
-        "acc_mean": log.accuracy.mean(0).tolist(),
-        "acc_std": log.accuracy.std(0).tolist(),
-    }
-    if log.opt_error is not None:
-        d["opt_err_mean"] = log.opt_error.mean(0).tolist()
-    return d
+    return log_record(log)
+
+
+def figure_rows_and_logs(name: str, cell: dict, *, per_call_denom: int):
+    """Harness CSV rows + log records from one scenario-cell payload."""
+    rows, logs = [], []
+    for rec in cell["logs"]:
+        logs.append(rec)
+        rows.append((f"{name}/{rec['scheme']}",
+                     rec["elapsed_s"] * 1e6 / per_call_denom,
+                     f"final_acc={rec['acc_mean'][-1]:.4f};"
+                     f"eta={rec['eta']:.3f}"))
+    return rows, logs
 
 
 def make_sc_setup(n_devices: int, *, samples_per_device: int = 1000,
@@ -70,37 +91,6 @@ def make_nc_setup(n_devices: int = 10, *, seed: int = 1):
     dep = make_deployment(WirelessConfig(n_devices=n_devices, seed=seed))
     eta = 0.08
     return task, ds, dep, eta
-
-
-def estimate_kappa_sc(task, ds, iters: int = 1500) -> float:
-    """kappa_sc^2 = (1/N) sum ||grad f_m(w*)||^2, with w* from full GD.
-
-    The paper treats kappa as a known constant of the task (Fig. 2 uses 3
-    for their MNIST); we estimate it on the synthetic data so the design
-    weights (omega_bias) match the actual heterogeneity.
-    """
-    from repro.fl.trainer import solve_w_star
-    x_all = np.concatenate([d.x for d in ds.devices])
-    y_all = np.concatenate([d.y for d in ds.devices])
-    w_star = solve_w_star(task, x_all, y_all, iters=iters)
-    xs = np.stack([d.x for d in ds.devices])
-    ys = np.stack([d.y for d in ds.devices])
-    g = task.device_grads(w_star, xs, ys)
-    return float(np.sqrt(np.mean(np.linalg.norm(g, axis=1) ** 2)))
-
-
-def estimate_kappa_nc(task, ds, n_probes: int = 3) -> float:
-    """kappa_nc: gradient dissimilarity max over a few probe points."""
-    xs = np.stack([d.x for d in ds.devices])
-    ys = np.stack([d.y for d in ds.devices])
-    worst = 0.0
-    for i in range(n_probes):
-        w = task.init_params(seed=100 + i)
-        g = task.device_grads(w, xs, ys)
-        gbar = g.mean(axis=0, keepdims=True)
-        worst = max(worst, float(np.sqrt(
-            np.mean(np.sum((g - gbar) ** 2, axis=1)))))
-    return worst
 
 
 def _solve_ota_spec(spec, solver: str):
@@ -173,25 +163,12 @@ def design_digital(task, dep, eta, *, kappa_sc: float = 3.0,
 def run_tuned(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
               seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1),
               backend="auto"):
-    """Per-scheme step-size grid search (paper Sec. V: 'step sizes for all
-    schemes are tuned via a small grid search'), then the full MC run.
-
-    ``backend="auto"`` routes every scheme through the JAX engine (all 14
-    baselines have ports) unless a time budget forces the NumPy loop.
-    """
-    best_eta, best_acc = None, -1.0
-    for frac in etas:
-        tr = FLTrainer(task, ds, dep, eta=frac * eta_max)
-        probe = tr.run(agg, rounds=rounds, trials=1,
-                       eval_every=max(rounds // 4, 1), seed=seed + 91,
-                       time_budget_s=time_budget_s, backend=backend)
-        acc = float(probe.accuracy[:, -2:].mean())   # 2-pt avg vs MC noise
-        if acc > best_acc:
-            best_acc, best_eta = acc, frac * eta_max
-    tr = FLTrainer(task, ds, dep, eta=best_eta)
-    log = tr.run(agg, rounds=rounds, trials=trials, eval_every=eval_every,
-                 seed=seed, time_budget_s=time_budget_s, backend=backend)
-    return log, best_eta
+    """Per-scheme step-size grid search + full MC run (now the scenario
+    layer's ``tune_and_run``; kept as the benchmark-facing name)."""
+    return tune_and_run(task, ds, dep, agg, eta_max=eta_max, rounds=rounds,
+                        trials=trials, eval_every=eval_every, seed=seed,
+                        time_budget_s=time_budget_s, etas=etas,
+                        backend=backend)
 
 
 def ota_baseline_suite(task, dep, ota_params):

@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from .common import save_result
+from .common import result_payload, save_result
 from repro.core.channel import WirelessConfig, make_deployment
 from repro.core.bounds import ObjectiveWeights
 from repro.core import ota_design, digital_design
@@ -124,8 +124,9 @@ def run(quick: bool = True, *, n_devices: int = 50, grid: tuple = (4, 4),
                 s, n_iters=it)[1].objective,
             digital_design.design_digital_batch, oracle_iters),
     ]
-    payload = {"quick": quick, "grid": list(grid), "n_devices": n_devices,
-               "parity_rtol": PARITY_RTOL, "results": results}
+    payload = result_payload("design_bench", quick=quick, grid=list(grid),
+                             n_devices=n_devices, parity_rtol=PARITY_RTOL,
+                             results=results)
     save_result(result_name, payload)
     rows = [(f"design_bench/{r['family']}",
              r["jax_cold_s"] * 1e6 / r["n_points"],

@@ -33,7 +33,8 @@ import time
 
 import numpy as np
 
-from .common import (design_digital, design_ota, make_sc_setup, save_result)
+from .common import (design_digital, design_ota, make_sc_setup,
+                     result_payload, save_result)
 from repro.core import baselines as B
 from repro.fl.trainer import FLTrainer
 
@@ -128,7 +129,7 @@ def run(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
     ]
     rows, results = _time_suite(trainer, suite, trials=trials,
                                 eval_every=eval_every)
-    payload = {"quick": quick, "results": results}
+    payload = result_payload("engine_bench", quick=quick, results=results)
     save_result(result_name, payload)
     return rows, payload
 
@@ -181,15 +182,14 @@ def run_minibatch(quick: bool = True, *, n_devices: int = 20, trials: int = 3,
                         eval_every=eval_every, seed=5,
                         time_budget_s=budget, backend="jax")
     t_budget = time.perf_counter() - t0
-    payload = {
-        "quick": quick, "batch_size": trainer.batch_size,
-        "results": results,
-        "time_budget_run": {
+    payload = result_payload(
+        "engine_bench_minibatch", quick=quick,
+        batch_size=trainer.batch_size, results=results,
+        time_budget_run={
             "scheme": agg.name, "rounds": rounds, "trials": trials,
             "time_budget_s": budget, "jax_s": t_budget,
             "frozen_wall_s": float(np.asarray(log_b.wall_time_s)[-1]),
-        },
-    }
+        })
     save_result(result_name, payload)
     return rows, payload
 
@@ -229,12 +229,10 @@ def run_digital_long(*, rounds: int = 1500, trials: int = 1,
         })
     peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     dither_tensor_mb = trials * rounds * n_devices * task.dim * 8 / 2 ** 20
-    payload = {
-        "results": results,
-        "peak_rss_mb": peak_rss_mb,
-        "retired_dither_tensor_mb": dither_tensor_mb,
-        "streamed_dither_mb_per_round": n_devices * task.dim * 4 / 2 ** 20,
-    }
+    payload = result_payload(
+        "engine_bench_digital", results=results, peak_rss_mb=peak_rss_mb,
+        retired_dither_tensor_mb=dither_tensor_mb,
+        streamed_dither_mb_per_round=n_devices * task.dim * 4 / 2 ** 20)
     save_result("engine_bench_digital", payload)
     return payload
 

@@ -1,59 +1,39 @@
 """Paper Fig. 2c/2d: strongly convex digital-FL comparison vs wall-clock
 latency (N=10, per-scheme latency accounting, Sec. V-A-2 baselines).
 
-Each scheme is charged its own per-round uplink latency (channel-capacity
-based, as in the paper) and trained under a common wall-clock budget; the
-comparison is accuracy/loss vs TIME, not rounds.
+Each scheme is charged its own per-round uplink latency and trained under
+a common wall-clock budget; the comparison is accuracy/loss vs TIME, not
+rounds. The protocol is declared in
+``repro.api.scenarios.fig2_digital_sc`` and executed by the scenario
+layer; this module is serialization glue (legacy payload shape).
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
+from repro.api import execute
+from repro.api.scenarios import fig2_digital_sc as make_spec
 
-from .common import (design_digital, digital_baseline_suite,
-                     estimate_kappa_sc, log_to_dict, make_sc_setup,
-                     run_tuned, save_result)
+from .common import figure_rows_and_logs, save_result
 
 
-def run(quick: bool = True, n_devices: int = 10):
+def run(quick: bool = True, n_devices: int = 10, use_cache: bool = False):
+    """Benchmark entry: recomputes by default (see fig2_ota_sc.run)."""
     t0 = time.time()
-    budget_s = 40.0 if quick else 150.0
-    max_rounds = 400 if quick else 1500
-    trials = 2 if quick else 4
-    task, ds, dep, eta_max = make_sc_setup(
-        n_devices, samples_per_device=300 if quick else 1000,
-        n_train_per_class=600 if quick else 1200)
-    kappa = estimate_kappa_sc(task, ds)
-    # batched jax design solver (core.sca_jax); solver="scipy" restores the
-    # per-point SLSQP SCA oracle
-    params, obj = design_digital(task, dep, eta_max, kappa_sc=kappa,
-                                 t_max_s=0.2, solver="auto")
-    params_d, obj_d = design_digital(task, dep, eta_max, kappa_sc=kappa,
-                                     t_max_s=0.2, solver="direct")
-    logs, rows = [], []
-    suite = digital_baseline_suite(task, dep, params)
-    from repro.core.baselines import ProposedDigital
-    suite.insert(1, ProposedDigital(params_d,
-                                    label="Proposed Digital FL (direct)"))
-    etas = (1.0, 0.25) if quick else (1.0, 0.5, 0.25, 0.1)
-    for agg in suite:
-        t1 = time.time()
-        log, best_eta = run_tuned(task, ds, dep, agg, eta_max=eta_max,
-                                  rounds=max_rounds, trials=trials,
-                                  eval_every=20, time_budget_s=budget_s,
-                                  etas=etas)
-        d = log_to_dict(log)
-        d["eta"] = best_eta
-        logs.append(d)
-        rows.append((f"fig2_digital_sc/{agg.name}",
-                     (time.time() - t1) * 1e6 / max(max_rounds * trials, 1),
-                     f"final_acc={log.final_accuracy():.4f};eta={best_eta:.3f}"))
-    payload = {"n_devices": n_devices, "budget_s": budget_s,
-               "trials": trials, "kappa_sc": kappa,
-               "design_objective": obj,
+    spec = make_spec(quick=quick, n_devices=n_devices)
+    rs = execute(spec, force=not use_cache)
+    cell = rs.cell(0).payload
+    max_rounds, trials = spec.run.rounds, spec.run.trials
+    rows, logs = figure_rows_and_logs(
+        "fig2_digital_sc", cell, per_call_denom=max(max_rounds * trials, 1))
+    design = cell["design"]["digital"]
+    payload = {"n_devices": n_devices, "budget_s": spec.run.time_budget_s,
+               "trials": trials, "kappa_sc": cell["kappa"],
+               "design_objective": design["objective"],
                "design_solver": "jax-batch",
-               "design_objective_direct": obj_d, "eta_max": eta_max,
-               "logs": logs, "elapsed_s": time.time() - t0}
+               "design_objective_direct": design["objective_direct"],
+               "eta_max": cell["eta_max"], "logs": logs,
+               "elapsed_s": time.time() - t0,
+               "scenario": cell["scenario"], "cell_hash": cell["cell_hash"]}
     save_result("fig2_digital_sc", payload)
     return rows, payload

@@ -1,55 +1,42 @@
 """Paper Fig. 2a/2b: strongly convex OTA-FL comparison (softmax regression,
 single-class-per-device, N devices, all Sec. V-A-1 baselines).
 
-Protocol mirrors the paper: fixed deployment, Monte-Carlo fading trials,
-per-scheme step-size grid search in (0, 2/(mu+L)], kappa_sc estimated on
-the actual (synthetic) task data.
+Now a thin declaration over the scenario API: the protocol (fixed
+deployment, MC fading trials, per-scheme step-size grid search in
+(0, 2/(mu+L)], kappa_sc estimated on the task data, batched-jax design
+with the SciPy-direct cross-check) lives in
+``repro.api.scenarios.fig2_ota_sc`` + ``repro.api.execute``; this module
+is plotting/serialization glue that keeps the legacy
+``experiments/results/fig2_ota_sc.json`` payload shape.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
+from repro.api import execute
+from repro.api.scenarios import fig2_ota_sc as make_spec
 
-from .common import (design_ota, estimate_kappa_sc, log_to_dict,
-                     make_sc_setup, ota_baseline_suite, run_tuned,
-                     save_result)
+from .common import figure_rows_and_logs, save_result
 
 
-def run(quick: bool = True, n_devices: int = 50):
+def run(quick: bool = True, n_devices: int = 50, use_cache: bool = False):
+    """Benchmark entry: recomputes by default so the reported rows measure
+    a real run; ``use_cache=True`` (or the ``repro.api.cli`` path) reuses
+    the content-hash-cached ResultSet instead."""
     t0 = time.time()
-    rounds = 80 if quick else 300
-    trials = 2 if quick else 4
-    task, ds, dep, eta_max = make_sc_setup(
-        n_devices, samples_per_device=300 if quick else 1000,
-        n_train_per_class=(n_devices * 300) // 10 if quick else 6000)
-    kappa = estimate_kappa_sc(task, ds)
-    # batched jax design solver (core.sca_jax); solver="scipy" restores the
-    # per-point SLSQP SCA oracle
-    params, obj = design_ota(task, dep, eta_max, kappa_sc=kappa,
-                             solver="auto")
-    params_d, obj_d = design_ota(task, dep, eta_max, kappa_sc=kappa,
-                                 solver="direct")
-    logs, rows = [], []
-    suite = ota_baseline_suite(task, dep, params)
-    from repro.core.baselines import ProposedOTA
-    suite.insert(2, ProposedOTA(params_d, label="Proposed OTA-FL (direct)"))
-    etas = (1.0, 0.25) if quick else (1.0, 0.5, 0.25, 0.1)
-    for agg in suite:
-        t1 = time.time()
-        log, best_eta = run_tuned(task, ds, dep, agg, eta_max=eta_max,
-                                  rounds=rounds, trials=trials,
-                                  eval_every=10, etas=etas)
-        d = log_to_dict(log)
-        d["eta"] = best_eta
-        logs.append(d)
-        rows.append((f"fig2_ota_sc/{agg.name}",
-                     (time.time() - t1) * 1e6 / max(rounds * trials, 1),
-                     f"final_acc={log.final_accuracy():.4f};eta={best_eta:.3f}"))
+    spec = make_spec(quick=quick, n_devices=n_devices)
+    rs = execute(spec, force=not use_cache)
+    cell = rs.cell(0).payload
+    rounds, trials = spec.run.rounds, spec.run.trials
+    rows, logs = figure_rows_and_logs(
+        "fig2_ota_sc", cell, per_call_denom=max(rounds * trials, 1))
+    design = cell["design"]["ota"]
     payload = {"n_devices": n_devices, "rounds": rounds, "trials": trials,
-               "kappa_sc": kappa, "design_objective": obj,
-               "design_solver": "jax-batch",
-               "design_objective_direct": obj_d, "eta_max": eta_max,
-               "logs": logs, "elapsed_s": time.time() - t0}
+               "kappa_sc": cell["kappa"], "design_objective":
+               design["objective"], "design_solver": "jax-batch",
+               "design_objective_direct": design["objective_direct"],
+               "eta_max": cell["eta_max"], "logs": logs,
+               "elapsed_s": time.time() - t0,
+               "scenario": cell["scenario"], "cell_hash": cell["cell_hash"]}
     save_result("fig2_ota_sc", payload)
     return rows, payload

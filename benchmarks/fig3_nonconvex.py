@@ -1,49 +1,38 @@
 """Paper Fig. 3: non-convex OTA-FL (two-classes-per-device, N=10).
 
 ResNet-18/CIFAR-10 is replaced by an MLP on the cifar-like synthetic set
-(CPU budget; see DESIGN.md §2) — the theory only needs smooth non-convex
-local objectives, and the two-class split preserves the heterogeneity that
-drives the bias-variance trade-off. kappa_nc is estimated from gradient
-dissimilarity at probe points (the paper uses the bound 2*G_max)."""
+(CPU budget) — the theory only needs smooth non-convex local objectives,
+and the two-class split preserves the heterogeneity that drives the
+bias-variance trade-off. kappa_nc is estimated from gradient dissimilarity
+at probe points (the paper uses the bound 2*G_max). The paper excludes the
+genie OPC OTA-FL here (PL condition + future CSI) — the declared
+``suite:fig3_ota`` mirrors that. Protocol in
+``repro.api.scenarios.fig3_nonconvex``; this module is glue.
+"""
 from __future__ import annotations
 
 import time
 
-from .common import (design_ota_nc, estimate_kappa_nc, log_to_dict,
-                     make_nc_setup, ota_baseline_suite, run_tuned,
-                     save_result)
+from repro.api import execute
+from repro.api.scenarios import fig3_nonconvex as make_spec
+
+from .common import figure_rows_and_logs, save_result
 
 
-def run(quick: bool = True, n_devices: int = 10):
+def run(quick: bool = True, n_devices: int = 10, use_cache: bool = False):
+    """Benchmark entry: recomputes by default (see fig2_ota_sc.run)."""
     t0 = time.time()
-    rounds = 100 if quick else 400
-    trials = 2 if quick else 3
-    task, ds, dep, eta_max = make_nc_setup(n_devices)
-    kappa = estimate_kappa_nc(task, ds)
-    params, obj = design_ota_nc(task, dep, eta_max,
-                                kappa_frac=kappa / (2 * task.g_max))
-    logs, rows = [], []
-    # paper excludes genie OPC OTA-FL here (PL condition + future CSI)
-    suite = [a for a in ota_baseline_suite(task, dep, params)
-             if "genie" not in a.name]
-    etas = (1.0, 0.5) if quick else (1.5, 1.0, 0.5, 0.25)
-    for agg in suite:
-        t1 = time.time()
-        # backend="auto": the MLPTask fig3 sweep runs through the JAX
-        # engine for every scheme (generic vmap grad path; parity pinned
-        # by tests/test_engine_parity.py::test_mlp_task_parity)
-        log, best_eta = run_tuned(task, ds, dep, agg, eta_max=eta_max,
-                                  rounds=rounds, trials=trials,
-                                  eval_every=10, seed=9, etas=etas,
-                                  backend="auto")
-        d = log_to_dict(log)
-        d["eta"] = best_eta
-        logs.append(d)
-        rows.append((f"fig3_nonconvex/{agg.name}",
-                     (time.time() - t1) * 1e6 / max(rounds * trials, 1),
-                     f"final_acc={log.final_accuracy():.4f};eta={best_eta:.3f}"))
+    spec = make_spec(quick=quick, n_devices=n_devices)
+    rs = execute(spec, force=not use_cache)
+    cell = rs.cell(0).payload
+    rounds, trials = spec.run.rounds, spec.run.trials
+    rows, logs = figure_rows_and_logs(
+        "fig3_nonconvex", cell, per_call_denom=max(rounds * trials, 1))
     payload = {"n_devices": n_devices, "rounds": rounds, "trials": trials,
-               "kappa_nc": kappa, "design_objective": obj, "eta_max": eta_max,
-               "logs": logs, "elapsed_s": time.time() - t0}
+               "kappa_nc": cell["kappa"],
+               "design_objective": cell["design"]["ota"]["objective"],
+               "eta_max": cell["eta_max"], "logs": logs,
+               "elapsed_s": time.time() - t0,
+               "scenario": cell["scenario"], "cell_hash": cell["cell_hash"]}
     save_result("fig3_nonconvex", payload)
     return rows, payload

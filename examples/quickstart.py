@@ -1,111 +1,84 @@
-"""Quickstart: the paper's core loop in ~60 seconds on CPU.
+"""Quickstart: declare a sweep, execute it, read the results — ~60s on CPU.
 
-Designs biased OTA-FL parameters with the SCA framework (Sec. IV-A), then
-trains softmax regression over a heterogeneous wireless deployment and
-compares against zero-bias Vanilla OTA-FL and the noiseless ideal.
+The repo's front door is the declarative scenario API (``repro.api``): an
+experiment is a pure-data ``ScenarioSpec`` (task + data partition +
+wireless deployment + scheme suite + Sec.-IV design policy + run options)
+and a parameter study is a ``SweepSpec`` — a grid over any spec axis by
+dotted path. The planner compiles the grid so every Sec.-IV design across
+it solves in ONE batched ``jit(vmap(...))`` call per scheme family, runs
+the Monte-Carlo simulations through the vmap/scan JAX engine
+(``FLTrainer.run(backend="auto")``), and lands a cached, manifest-tracked
+``ResultSet``: re-running a finished sweep is a no-op.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Backends: ``FLTrainer.run(..., backend=...)`` selects the simulation
-engine. Both replay identical random streams, so the trajectories match to
-~1e-5 — the engine is just much faster at Monte-Carlo scale.
+The same sweeps drive the figure pipelines and the CLI:
 
-    backend   | what runs                          | covers
-    ----------+------------------------------------+---------------------
-    "numpy"   | reference Python-loop oracle       | every scheme + all
-              | (core/baselines.py)                | trainer options
-    "jax"     | vmap/scan engine (fl/engine.py);   | all 14 paper schemes
-              | Pallas epilogue/quantizer/scoring  | (OTA + digital);
-              | kernels; streaming counter-based   | full batch or SGD
-              | dither + batch indices             | mini-batches; time
-              | (O(N*d)/round)                     | budgets (in-scan
-              |                                    | freeze mask)
-    "auto"    | the engine whenever the scheme has | everything (falls
-    (default) | a registered port                  | back to NumPy
-              |                                    | otherwise)
+    PYTHONPATH=src python -m repro.api.cli list
+    PYTHONPATH=src python -m repro.api.cli describe snr_het
+    PYTHONPATH=src python -m repro.api.cli run sweep_smoke
 """
+import tempfile
+import time
+
 import numpy as np
 
-from repro.core import baselines as B
-from repro.core.bounds import ObjectiveWeights
-from repro.core.channel import WirelessConfig, make_deployment
-from repro.core.ota import lemma1_variance
-from repro.core import ota_design
-from repro.data.loader import FLDataset
-from repro.data.partition import partition_by_class
-from repro.data.synthetic import SyntheticSpec, make_classification_dataset
-from repro.fl.tasks import SoftmaxRegressionTask
-from repro.fl.trainer import FLTrainer
+from repro.api import (DataSpec, DesignPolicy, RunSpec, ScenarioSpec,
+                       SweepSpec, execute, plan)
+from repro.core.channel import WirelessConfig
 
 
 def main():
-    n_devices = 10
-    spec = SyntheticSpec(n_train_per_class=300, n_test_per_class=100,
-                         noise_sigma=1.5)
-    x_tr, y_tr, x_te, y_te = make_classification_dataset(spec)
-    shards = partition_by_class(x_tr, y_tr, n_devices, 1, 300, seed=3)
-    ds = FLDataset.from_shards(shards, x_te, y_te)
-    task = SoftmaxRegressionTask(n_features=784, mu=0.01, g_max=20.0)
+    # One declarative scenario: softmax regression over a heterogeneous
+    # wireless deployment (1 class/device), the proposed biased OTA design
+    # vs the zero-bias Vanilla OTA baseline and the noiseless ideal.
+    # kappa is pinned to the paper's constant (3.0) to skip estimation.
+    base = ScenarioSpec(
+        name="quickstart",
+        data=DataSpec(n_train_per_class=300, n_test_per_class=100,
+                      samples_per_device=300),
+        wireless=WirelessConfig(n_devices=10, seed=1),
+        design=DesignPolicy(kappa=3.0),
+        run=RunSpec(rounds=80, trials=2, eval_every=20, etas=(1.0,)),
+        schemes=("ideal", "proposed_ota", "vanilla_ota"))
 
-    dep = make_deployment(WirelessConfig(n_devices=n_devices, seed=1))
-    print("device avg channel gains (dB):",
-          np.round(10 * np.log10(dep.lambdas), 1))
+    # ... and a sweep: the bias-variance trade-off (omega_bias) x SNR grid.
+    # Any dotted spec path is a sweepable axis.
+    sweep = SweepSpec(name="quickstart", base=base,
+                      axes={"design.omega_bias_scale": (0.1, 1.0, 10.0),
+                            "wireless.tx_power_dbm": (0.0,)})
 
-    eta = 2.0 / (task.mu + task.smooth_l)
-    weights = ObjectiveWeights.strongly_convex(eta=eta, mu=task.mu,
-                                               kappa_sc=3.0, n=n_devices)
-    dspec = ota_design.OTADesignSpec(
-        lambdas=dep.lambdas, dim=task.dim, g_max=task.g_max,
-        e_s=dep.cfg.energy_per_symbol, n0=dep.cfg.noise_power,
-        weights=weights)
-    params, res = ota_design.design_ota_sca(dspec)
-    p = params.participation_levels(dep.lambdas)
-    print(f"\nSCA design: objective={res.objective:.3f} "
-          f"({res.n_iters} iterations)")
-    print("participation levels p_m:", np.round(p, 4))
-    print("Lemma-1 variance:", lemma1_variance(params, dep.lambdas))
+    # The plan shows the compiled work before anything runs: 3 cells, and
+    # ONE batched design solve covering all of them.
+    print(plan(sweep).describe(), "\n")
 
-    # The same design through the batched JAX solver (solver="jax" in the
-    # benchmark pipelines): a whole omega sweep solves in ONE jit — here the
-    # fig2-style bias-variance trade-off grid around the operating point.
-    import dataclasses
-    import time
-    sweep = [dataclasses.replace(
-        dspec, weights=ObjectiveWeights(omega_var=weights.omega_var,
-                                        omega_bias=weights.omega_bias * s))
-        for s in (0.1, 1.0, 10.0)]
-    t0 = time.perf_counter()
-    _, objs = ota_design.design_ota_batch(sweep)
-    print(f"\nbatched JAX design (3-point omega_bias sweep, "
-          f"{time.perf_counter() - t0:.2f}s incl. jit):")
-    print("  objectives:", np.round(objs, 3),
-          f"(middle point vs SCA: {objs[1] - res.objective:+.2e})")
+    with tempfile.TemporaryDirectory() as out:
+        t0 = time.perf_counter()
+        rs = execute(sweep, out_dir=out,
+                     progress=lambda m: print(f"  {m}"))
+        print(f"\nexecuted in {time.perf_counter() - t0:.1f}s "
+              f"(git {rs.manifest['git_rev'][:10]})")
 
-    trainer = FLTrainer(task, ds, dep, eta=eta)
-    for agg in (B.IdealFedAvg(), B.ProposedOTA(params),
-                B.VanillaOTA(task.dim, task.g_max,
-                             dep.cfg.energy_per_symbol,
-                             dep.cfg.noise_power)):
-        # backend="auto" (default) routes ported schemes through the JAX
-        # vmap/scan engine; backend="numpy" forces the reference loop
-        log = trainer.run(agg, rounds=80, trials=2, eval_every=20, seed=5,
-                          backend="auto")
-        acc, _ = log.mean_std("accuracy")
-        print(f"{agg.name:25s} accuracy per 20 rounds: {np.round(acc, 3)}")
+        for cell in rs:
+            p = cell.payload
+            scale = p["overrides"]["design.omega_bias_scale"]
+            accs = {r["scheme_key"]: r["acc_mean"][-1] for r in p["logs"]}
+            print(f"omega_bias x{scale:<5g} design_obj="
+                  f"{p['design']['ota']['objective']:9.3f}  "
+                  + "  ".join(f"{k}={v:.3f}" for k, v in accs.items()))
 
-    # SGD mini-batches + a per-round latency budget, still backend="jax":
-    # batch indices are counter-based (threefry on seed/trial/round/device,
-    # core.rngstream.batch_block) and regenerated inside the engine's scan,
-    # and the budget freezes training in-scan once the cumulative uplink
-    # airtime is spent — both bit-identical to the NumPy oracle loop.
-    sgd = FLTrainer(task, ds, dep, eta=eta, batch_size=32)
-    budget = 50 * task.dim / dep.cfg.bandwidth_hz   # airtime for 50 rounds
-    log = sgd.run(B.ProposedOTA(params), rounds=80, trials=2, eval_every=20,
-                  seed=5, time_budget_s=budget, backend="jax")
-    acc, _ = log.mean_std("accuracy")
-    print(f"\nSGD (|B|=32) under a {budget * 1e3:.0f} ms uplink budget "
-          f"(froze at {np.asarray(log.wall_time_s)[-1] * 1e3:.0f} ms):")
-    print(f"{log.scheme:25s} accuracy per 20 rounds: {np.round(acc, 3)}")
+        # content-hash caching: the same sweep again is a cache no-op
+        t0 = time.perf_counter()
+        rs2 = execute(sweep, out_dir=out)
+        print(f"\nre-run: all {len(rs2)} cells cached={rs2.all_cached} "
+              f"in {time.perf_counter() - t0:.2f}s")
+
+    # The trained trajectories are plain arrays — e.g. the bias-variance
+    # trade-off: more omega_bias weight pushes the design toward uniform
+    # participation (less bias, more noise), and vice versa.
+    rec = rs.cell(1).log("proposed_ota")
+    print("\nproposed OTA acc trajectory (omega x1):",
+          np.round(rec["acc_mean"], 3))
 
 
 if __name__ == "__main__":

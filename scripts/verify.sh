@@ -10,10 +10,14 @@
 # SGD mini-batch engine suite (in-scan counter-based batch sampling + the
 # time-budget freeze mask — the regimes that used to fall back to NumPy),
 # the design-solver benchmark (batched JAX SCA vs the per-point SciPy
-# oracle; fails if the JAX path loses objective quality anywhere), and the
+# oracle; fails if the JAX path loses objective quality anywhere), the
 # 1500-round digital engine horizon under a fixed peak-RSS budget — the
 # streaming-dither O(N*d) memory contract (a rematerialized
-# (trials, T, N, d) dither tensor would blow the budget by ~1.9 GB).
+# (trials, T, N, d) dither tensor would blow the budget by ~1.9 GB) —
+# and the declarative scenario-sweep smoke: a 2x2 grid through
+# `python -m repro.api.cli run sweep_smoke` (one batched design solve for
+# the grid), asserting the ResultSet manifest is written and that
+# re-running the finished sweep is a cache no-op (--expect-cached).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -42,12 +46,22 @@ echo "== digital engine 1500-round horizon (peak-RSS guard) =="
 python -m benchmarks.engine_bench --digital-long --rss-budget-mb 2048
 mem_status=$?
 
+echo "== scenario sweep smoke (2x2 grid; manifest + cache no-op) =="
+# fresh 2x2 sweep through the declarative CLI, then assert the manifest
+# landed and a re-run of the finished sweep is a pure cache hit
+sweep_dir="experiments/results/scenarios/sweep_smoke"
+rm -rf "$sweep_dir"
+python -m repro.api.cli run sweep_smoke \
+    && test -f "$sweep_dir/manifest.json" \
+    && python -m repro.api.cli run sweep_smoke --expect-cached
+sweep_status=$?
+
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
         || [ "$minibatch_status" -ne 0 ] || [ "$design_status" -ne 0 ] \
-        || [ "$mem_status" -ne 0 ]; then
+        || [ "$mem_status" -ne 0 ] || [ "$sweep_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
          "minibatch=$minibatch_status design=$design_status" \
-         "mem=$mem_status)" >&2
+         "mem=$mem_status sweep=$sweep_status)" >&2
     exit 1
 fi
 echo "verify OK"

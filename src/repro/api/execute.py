@@ -1,0 +1,201 @@
+"""Sweep executor: grouped batched design solves, cached cell runs.
+
+``execute()`` turns a plan into a versioned ``ResultSet``:
+
+1. **Cache check** — each cell's content hash (spec + schema version) is
+   looked up under ``<out_dir>/cells/<hash>.json``; hits short-circuit the
+   whole cell (no design solve, no simulation).
+2. **Grouped design** — the remaining cells' design problems solve as ONE
+   ``design_ota_batch``/``design_digital_batch`` call per plan group
+   (family x device count), hitting the vmapped ``core.sca_jax`` solvers
+   the way they were built to be used. Non-batched solver policies
+   ("sca"/"scipy"/"direct") fall back to per-point oracle calls.
+3. **Simulation** — every scheme runs through the tuned-MC protocol with
+   ``FLTrainer.run(backend=...)`` ("auto" = the vmap/scan JAX engine for
+   all ported schemes).
+4. **Artifact** — per-cell payloads + a manifest (sweep spec + hash, git
+   rev, per-cell status/timings) land under ``out_dir``; re-running a
+   half-finished sweep recomputes only the missing cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+from ..core import digital_design, ota_design
+from . import materialize as mat
+from . import schemes
+from .plan import Plan, plan as make_plan
+from .results import (DEFAULT_RESULTS_ROOT, SCHEMA_VERSION, CellResult,
+                      ResultSet, dump_json, git_rev, log_record,
+                      result_payload)
+
+
+def default_out_dir(name: str) -> Path:
+    return DEFAULT_RESULTS_ROOT / "scenarios" / name
+
+
+def _load_cached(path: Path) -> Optional[dict]:
+    if not path.exists():
+        return None
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        return None
+    return payload
+
+
+def _solve_group(group, contexts) -> None:
+    """One design group: a single batched jit call (or per-point oracle)."""
+    members = [contexts[i] for i in group.cell_indices]
+    specs = [ctx.design_spec(group.family) for ctx in members]
+    if group.family == "ota":
+        batch, sca, direct = (ota_design.design_ota_batch,
+                              ota_design.design_ota_sca,
+                              ota_design.design_ota_direct)
+    else:
+        batch, sca, direct = (digital_design.design_digital_batch,
+                              digital_design.design_digital_sca,
+                              digital_design.design_digital_direct)
+    if group.batched:
+        params, objs = batch(specs)
+        solved = list(zip(params, objs))
+    elif group.solver in ("sca", "scipy"):
+        solved = []
+        for s in specs:
+            p, res = sca(s, n_iters=8)
+            solved.append((p, res.objective))
+    elif group.solver == "direct":
+        solved = [direct(s) for s in specs]
+    else:
+        raise ValueError(f"unknown design solver {group.solver!r}")
+    for ctx, (p, obj) in zip(members, solved):
+        ctx.set_design(group.family, "designed", p, obj)
+        if group.solver == "direct":
+            # the designed variant IS the direct solve; don't solve twice
+            ctx.set_design(group.family, "direct", p, obj)
+    if group.solver != "direct":
+        for idx in group.needs_direct:
+            ctx = contexts[idx]
+            p, obj = direct(ctx.design_spec(group.family))
+            ctx.set_design(group.family, "direct", p, obj)
+
+
+def _run_cell(cell, ctx) -> dict:
+    """All schemes of one cell through the tuned Monte-Carlo protocol."""
+    scenario = ctx.scenario
+    t0 = time.perf_counter()
+    logs = []
+    for key in schemes.expand_schemes(scenario.schemes):
+        t1 = time.perf_counter()
+        agg = schemes.build_scheme(key, ctx)
+        log, best_eta = mat.run_cell_scheme(ctx, agg)
+        logs.append(log_record(log, scheme_key=key, eta=best_eta,
+                               elapsed_s=time.perf_counter() - t1))
+    design = {}
+    if ctx.ota_objective is not None:
+        design["ota"] = {"objective": ctx.ota_objective,
+                         "solver": scenario.design.solver}
+        if ctx.ota_objective_direct is not None:
+            design["ota"]["objective_direct"] = ctx.ota_objective_direct
+    if ctx.dig_objective is not None:
+        design["digital"] = {"objective": ctx.dig_objective,
+                             "solver": scenario.design.solver}
+        if ctx.dig_objective_direct is not None:
+            design["digital"]["objective_direct"] = ctx.dig_objective_direct
+    return result_payload(
+        "scenario_cell", name=scenario.name, cell_hash=cell.cell_hash,
+        overrides=cell.overrides, scenario=scenario.to_dict(),
+        n_devices=scenario.n_devices, eta_max=ctx.eta_max, kappa=ctx.kappa,
+        omega_var=ctx.weights.omega_var, omega_bias=ctx.weights.omega_bias,
+        design=design, logs=logs, elapsed_s=time.perf_counter() - t0)
+
+
+def execute(spec_or_plan, *, out_dir: Optional[Path] = None,
+            force: bool = False, save: bool = True,
+            progress: Optional[Callable[[str], None]] = None) -> ResultSet:
+    """Execute a scenario/sweep/plan into a ``ResultSet``.
+
+    ``force=True`` ignores (and overwrites) cached cells; ``save=False``
+    keeps the result in memory only (used by tests).
+    """
+    say = progress if progress is not None else (lambda msg: None)
+    pl = (spec_or_plan if isinstance(spec_or_plan, Plan)
+          else make_plan(spec_or_plan))
+    out_dir = Path(out_dir) if out_dir is not None else \
+        default_out_dir(pl.name)
+    cells_dir = out_dir / "cells"
+    t0 = time.perf_counter()
+
+    results: dict[int, CellResult] = {}
+    todo = []
+    for cell in pl.cells:
+        cached = None if force else _load_cached(
+            cells_dir / f"{cell.cell_hash}.json")
+        if cached is not None:
+            say(f"cell {cell.index} [{cell.cell_hash}] cached")
+            results[cell.index] = CellResult(
+                index=cell.index, cell_hash=cell.cell_hash,
+                overrides=cell.overrides, status="cached",
+                path=cells_dir / f"{cell.cell_hash}.json", payload=cached)
+        else:
+            todo.append(cell)
+
+    # materialize every non-cached cell (memoized across the sweep), then
+    # solve each design group's grid in one batched call
+    memo = mat.new_memo()
+    contexts = {c.index: mat.materialize(c.scenario, memo) for c in todo}
+    todo_idx = set(contexts)
+    for group in pl.design_groups:
+        live = [i for i in group.cell_indices if i in todo_idx]
+        if not live:
+            continue
+        say(f"design {group.family} (N={group.n_devices}): "
+            f"{len(live)} point(s), "
+            + ("one batched jit" if group.batched else group.solver))
+        _solve_group(_filtered(group, live), contexts)
+
+    for cell in todo:
+        say(f"cell {cell.index} [{cell.cell_hash}] running "
+            f"{len(schemes.expand_schemes(cell.scenario.schemes))} schemes")
+        payload = _run_cell(cell, contexts[cell.index])
+        path = None
+        if save:
+            # persist each cell the moment it completes so an interrupted
+            # sweep resumes from the finished cells, not from scratch
+            path = cells_dir / f"{cell.cell_hash}.json"
+            cells_dir.mkdir(parents=True, exist_ok=True)
+            path.write_text(dump_json(payload))
+        results[cell.index] = CellResult(
+            index=cell.index, cell_hash=cell.cell_hash,
+            overrides=cell.overrides, status="computed",
+            path=path, payload=payload)
+
+    ordered = [results[c.index] for c in pl.cells]
+    manifest = result_payload(
+        "result_set", name=pl.name, spec=pl.sweep.to_dict(),
+        sweep_hash=pl.sweep.spec_hash(), git_rev=git_rev(),
+        n_cells=len(ordered),
+        axes={p: list(v) for p, v in pl.sweep.axes},
+        cells=[{"index": c.index, "cell_hash": c.cell_hash,
+                "overrides": c.overrides, "status": c.status,
+                "elapsed_s": c.payload.get("elapsed_s")}
+               for c in ordered],
+        elapsed_s=time.perf_counter() - t0)
+    rs = ResultSet(manifest=manifest, cells=ordered)
+    if save:
+        rs.save(out_dir)
+        say(f"manifest -> {out_dir / 'manifest.json'}")
+    return rs
+
+
+def _filtered(group, live):
+    """A design group restricted to its non-cached member cells."""
+    return dataclasses.replace(
+        group, cell_indices=tuple(live),
+        needs_direct=tuple(i for i in group.needs_direct if i in live))

@@ -1,0 +1,101 @@
+"""Sweep planner: compile a declarative spec into batched work.
+
+``plan()`` expands a ``ScenarioSpec``/``SweepSpec`` into scenario cells
+(content-hashed — the executor's cache key) and groups the Sec.-IV design
+work so a whole grid solves in single ``design_ota_batch`` /
+``design_digital_batch`` calls: cells needing a designed scheme are
+bucketed by (family, device count, solver) — the batched solvers vmap
+over grid points but require a shared N (``stack_*_specs``) — giving
+exactly one batched solve per scheme family for any fixed-N grid.
+
+The plan is pure metadata: nothing is materialized or solved until
+``repro.api.execute.execute``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import schemes
+from .spec import ScenarioSpec, SweepSpec, as_sweep, spec_hash
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One grid point: override-applied scenario + its content hash."""
+
+    index: int
+    overrides: dict
+    scenario: ScenarioSpec
+    cell_hash: str
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignGroup:
+    """One batched design solve: all member cells in a single jit."""
+
+    family: str                  # "ota" | "digital"
+    n_devices: int
+    solver: str                  # policy solver of the member cells
+    cell_indices: tuple          # cells whose design spec joins this batch
+    needs_direct: tuple          # subset also needing the per-point direct solve
+
+    @property
+    def batched(self) -> bool:
+        """Whether the group compiles to one batched jit call (vs per-point
+        SciPy oracle calls for solver="sca"/"scipy"/"direct")."""
+        return self.solver in ("auto", "jax")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    sweep: SweepSpec
+    cells: tuple                 # tuple[Cell, ...]
+    design_groups: tuple         # tuple[DesignGroup, ...]
+
+    @property
+    def name(self) -> str:
+        return self.sweep.name
+
+    def describe(self) -> str:
+        lines = [f"sweep {self.name!r}: {len(self.cells)} cell(s), "
+                 f"hash {self.sweep.spec_hash()}"]
+        for path, vals in self.sweep.axes:
+            lines.append(f"  axis {path} = {list(vals)}")
+        for c in self.cells:
+            keys = schemes.expand_schemes(c.scenario.schemes)
+            ov = ", ".join(f"{k}={v}" for k, v in c.overrides.items()) or "-"
+            lines.append(f"  cell {c.index} [{c.cell_hash}] {ov} "
+                         f"({len(keys)} schemes)")
+        for g in self.design_groups:
+            kind = ("1 batched jit" if g.batched
+                    else f"{len(g.cell_indices)} per-point {g.solver} solves")
+            lines.append(f"  design {g.family} (N={g.n_devices}): "
+                         f"{len(g.cell_indices)} point(s) -> {kind}"
+                         + (f", direct cross-check on {len(g.needs_direct)}"
+                            if g.needs_direct else ""))
+        return "\n".join(lines)
+
+
+def plan(spec) -> Plan:
+    """Compile a scenario/sweep into cells + grouped design work."""
+    sweep = as_sweep(spec)
+    cells = []
+    for i, (overrides, scenario) in enumerate(sweep.points()):
+        cells.append(Cell(index=i, overrides=overrides, scenario=scenario,
+                          cell_hash=spec_hash(scenario.to_dict())))
+
+    groups: dict = {}
+    for cell in cells:
+        fams = schemes.design_families(cell.scenario.schemes)
+        for family, needs_direct in fams.items():
+            key = (family, cell.scenario.n_devices,
+                   cell.scenario.design.solver)
+            members, direct = groups.setdefault(key, ([], []))
+            members.append(cell.index)
+            if needs_direct:
+                direct.append(cell.index)
+    design_groups = tuple(
+        DesignGroup(family=family, n_devices=n, solver=solver,
+                    cell_indices=tuple(members), needs_direct=tuple(direct))
+        for (family, n, solver), (members, direct) in groups.items())
+    return Plan(sweep=sweep, cells=tuple(cells), design_groups=design_groups)

@@ -1,0 +1,130 @@
+"""Named scenario/sweep builders: the paper figures + beyond-paper sweeps.
+
+Each builder returns a pure-data ``ScenarioSpec``/``SweepSpec``; the figure
+entries reproduce the legacy hand-rolled pipelines' protocols exactly
+(same seeds, sizes, suites, tuning grids), so executing them yields the
+pre-refactor trajectories. ``REGISTRY`` backs the CLI
+(``python -m repro.api.cli run/list/describe``).
+"""
+from __future__ import annotations
+
+from ..core.channel import WirelessConfig
+from .spec import (DataSpec, DesignPolicy, RunSpec, ScenarioSpec, SweepSpec,
+                   TaskSpec)
+
+
+def fig2_ota_sc(quick: bool = True, n_devices: int = 50) -> ScenarioSpec:
+    """Paper Fig. 2a/2b: strongly convex OTA-FL comparison (Sec. V-A-1)."""
+    return ScenarioSpec(
+        name="fig2_ota_sc",
+        data=DataSpec(
+            n_train_per_class=((n_devices * 300) // 10 if quick else 6000),
+            samples_per_device=300 if quick else 1000),
+        wireless=WirelessConfig(n_devices=n_devices, seed=1),
+        design=DesignPolicy(),
+        run=RunSpec(rounds=80 if quick else 300, trials=2 if quick else 4,
+                    eval_every=10,
+                    etas=(1.0, 0.25) if quick else (1.0, 0.5, 0.25, 0.1)),
+        schemes=("suite:fig2_ota",))
+
+
+def fig2_digital_sc(quick: bool = True, n_devices: int = 10) -> ScenarioSpec:
+    """Paper Fig. 2c/2d: digital FL vs wall-clock latency (Sec. V-A-2)."""
+    return ScenarioSpec(
+        name="fig2_digital_sc",
+        data=DataSpec(n_train_per_class=600 if quick else 1200,
+                      samples_per_device=300 if quick else 1000),
+        wireless=WirelessConfig(n_devices=n_devices, seed=1),
+        design=DesignPolicy(t_max_s=0.2),
+        run=RunSpec(rounds=400 if quick else 1500,
+                    trials=2 if quick else 4, eval_every=20,
+                    time_budget_s=40.0 if quick else 150.0,
+                    etas=(1.0, 0.25) if quick else (1.0, 0.5, 0.25, 0.1)),
+        schemes=("suite:fig2_digital",))
+
+
+def fig3_nonconvex(quick: bool = True, n_devices: int = 10) -> ScenarioSpec:
+    """Paper Fig. 3: non-convex OTA-FL (MLP, two classes/device)."""
+    return ScenarioSpec(
+        name="fig3_nonconvex",
+        task=TaskSpec(kind="mlp", n_features=3072, hidden=48, mu=0.01,
+                      g_max=49.0),
+        data=DataSpec(name="cifar-like", image_shape=(32, 32, 3),
+                      n_train_per_class=120, n_test_per_class=100,
+                      noise_sigma=1.8, dataset_seed=7,
+                      classes_per_device=2, samples_per_device=100,
+                      partition_seed=5),
+        wireless=WirelessConfig(n_devices=n_devices, seed=1),
+        design=DesignPolicy(objective="non_convex", smooth_l=10.0),
+        run=RunSpec(rounds=100 if quick else 400, trials=2 if quick else 3,
+                    eval_every=10, seed=9, eta_max=0.08,
+                    etas=(1.0, 0.5) if quick else (1.5, 1.0, 0.5, 0.25)),
+        schemes=("suite:fig3_ota",))
+
+
+def snr_het(quick: bool = True, n_devices: int = 10) -> SweepSpec:
+    """Beyond-paper workload: SNR x path-loss-heterogeneity sweep.
+
+    Compares the proposed biased OTA and digital schemes against their
+    zero-bias baselines (Vanilla OTA-FL; proportional-fairness selection)
+    over a grid of transmit power (SNR) and path-loss exponent
+    (heterogeneity level) — the benchmark axes of the OTA-FL literature
+    (Zhu et al.; Sery et al.). The whole grid's Sec.-IV designs solve as
+    ONE batched jit per scheme family.
+    """
+    base = ScenarioSpec(
+        name="snr_het",
+        data=DataSpec(n_train_per_class=300 if quick else 1200,
+                      samples_per_device=150 if quick else 600),
+        wireless=WirelessConfig(n_devices=n_devices, seed=1),
+        design=DesignPolicy(t_max_s=0.2),
+        run=RunSpec(rounds=60 if quick else 200, trials=2,
+                    eval_every=10, etas=(1.0, 0.25)),
+        schemes=("ideal", "proposed_ota", "vanilla_ota",
+                 "proposed_digital", "prop_fairness"))
+    if quick:
+        axes = {"wireless.tx_power_dbm": (-5.0, 5.0),
+                "wireless.pl_exponent": (2.2, 2.6)}
+    else:
+        axes = {"wireless.tx_power_dbm": (-10.0, 0.0, 10.0),
+                "wireless.pl_exponent": (2.0, 2.2, 2.6)}
+    return SweepSpec(name="snr_het", base=base, axes=axes)
+
+
+def sweep_smoke(quick: bool = True) -> SweepSpec:
+    """CI smoke: a 2x2 SNR x omega_bias sweep at toy scale (~1 min).
+
+    Exercises the whole scenario layer — planning, one batched design
+    solve for the grid, engine-backed runs, manifest + content-hash cache
+    — with fixed kappa (no estimation) and a single-point eta grid.
+    """
+    base = ScenarioSpec(
+        name="sweep_smoke",
+        data=DataSpec(n_train_per_class=60, n_test_per_class=30,
+                      samples_per_device=60),
+        wireless=WirelessConfig(n_devices=6, seed=1),
+        design=DesignPolicy(kappa=3.0),
+        run=RunSpec(rounds=8, trials=1, eval_every=4, etas=(1.0,)),
+        schemes=("proposed_ota", "vanilla_ota"))
+    return SweepSpec(name="sweep_smoke", base=base,
+                     axes={"wireless.tx_power_dbm": (-3.0, 3.0),
+                           "design.omega_bias_scale": (0.5, 2.0)})
+
+
+REGISTRY = {
+    "fig2_ota_sc": fig2_ota_sc,
+    "fig2_digital_sc": fig2_digital_sc,
+    "fig3_nonconvex": fig3_nonconvex,
+    "snr_het": snr_het,
+    "sweep_smoke": sweep_smoke,
+}
+
+
+def names() -> list[str]:
+    return sorted(REGISTRY)
+
+
+def get(name: str, *, quick: bool = True):
+    if name not in REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; registered: {names()}")
+    return REGISTRY[name](quick=quick)
