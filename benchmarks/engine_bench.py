@@ -23,6 +23,13 @@ memory proof (the retired (trials, T, N, d) dither tensor would add
 trials*T*N*d*8 bytes on top). ``--rss-budget-mb`` turns it into a CI guard
 (exit 1 on budget overrun; used by scripts/verify.sh). Writes
 experiments/results/engine_bench_digital.json.
+
+``--scale`` runs the ``rng="fast"`` population-scale grid (N up to 1024
+devices at the fig2 model dimension, zero host-side RNG precompute) plus
+the fig2-sized replay-vs-fast speedup record; honors ``--rss-budget-mb``
+and writes the schema-stamped perf trajectory to the repo-root
+``BENCH_engine_scale.json`` (tracked across PRs, unlike the
+experiments/results artifacts).
 """
 from __future__ import annotations
 
@@ -33,19 +40,20 @@ import time
 
 import numpy as np
 
-from .common import (design_digital, design_ota, make_sc_setup,
+from .common import (design_digital, design_ota, dump_json, make_sc_setup,
                      result_payload, save_result)
 from repro.core import baselines as B
 from repro.fl.trainer import FLTrainer
 
 
 def _time_backend(trainer, agg, backend, *, rounds, trials, eval_every,
-                  seed, repeats=1):
+                  seed, repeats=1, rng="replay"):
     best, log = np.inf, None
     for _ in range(repeats):
         t0 = time.perf_counter()
         log = trainer.run(agg, rounds=rounds, trials=trials,
-                          eval_every=eval_every, seed=seed, backend=backend)
+                          eval_every=eval_every, seed=seed, backend=backend,
+                          rng=rng)
         best = min(best, time.perf_counter() - t0)
     return best, log
 
@@ -237,6 +245,117 @@ def run_digital_long(*, rounds: int = 1500, trials: int = 1,
     return payload
 
 
+def run_scale(quick: bool = True, *, n_grid=None, rounds: int = 30,
+              trials: int = 1, samples_per_device: int = 50,
+              fig2_rounds: int = 200, fig2_trials: int = 8,
+              rss_budget_mb=None):
+    """Population-scale fast-RNG benchmark -> top-level BENCH_engine_scale.json.
+
+    Two measurements behind the ``rng="fast"`` mode (counter-based
+    threefry streams generated in-scan, zero host-side per-trial
+    precompute):
+
+    1. **Scale grid** — N up to 1024 devices at the fig2 model dimension
+       (d = 7850) through the engine in fast mode, with the cumulative
+       peak-RSS record. Replay mode would precompute a (trials, T, d)
+       AWGN block plus a (trials, T, N) fading tensor per run
+       (``replay_host_mb`` records what each point dodges); fast mode
+       carries three (2,)-uint32 keys per trial. Non-designed OTA
+       schemes (VanillaOTA / OPC-OTA-FL) so the grid never waits on an
+       N=1024 design solve nor on the interpret-mode quantize kernel.
+    2. **fig2-scale replay-vs-fast** — the same fig2-sized workload
+       (N=20, d=7850) end-to-end in both modes; the recorded
+       ``speedup_fast`` is the perf trajectory tracked across PRs. On
+       CPU the scan dominates this horizon, so the honest number here is
+       modest — the scaling win is the grid above, where replay's host
+       tensors would grow with trials*T*(d+N) and fast mode's stay O(1).
+
+    The payload is schema-stamped (``result_payload``) and written to the
+    repo root — not ``experiments/results`` — so the perf trajectory is
+    versioned next to the code. ``rss_budget_mb`` is recorded in the
+    payload; ``main()`` enforces it (exit 1 on overrun — the
+    scripts/verify.sh CI guard).
+    """
+    from pathlib import Path
+
+    if n_grid is None:
+        n_grid = (256, 1024) if quick else (128, 256, 512, 1024)
+    if quick:
+        fig2_rounds, fig2_trials = min(fig2_rounds, 120), min(fig2_trials, 6)
+    eval_every = max(rounds // 2, 1)
+    scale_results = []
+    for n_devices in n_grid:
+        task, ds, dep, eta_max = make_sc_setup(
+            n_devices, samples_per_device=samples_per_device,
+            n_train_per_class=max((n_devices * samples_per_device) // 10,
+                                  200))
+        eta = 0.25 * eta_max
+        cfg = dep.cfg
+        wargs = (task.dim, task.g_max, cfg.energy_per_symbol,
+                 cfg.noise_power)
+        trainer = FLTrainer(task, ds, dep, eta=eta)
+        for key, agg in (("vanilla_ota", B.VanillaOTA(*wargs)),
+                         ("opc_ota_fl", B.OPCOTAFL(*wargs))):
+            t_cold, _ = _time_backend(trainer, agg, "jax", rounds=rounds,
+                                      trials=trials, eval_every=eval_every,
+                                      seed=5, rng="fast")
+            t_warm, log = _time_backend(trainer, agg, "jax", rounds=rounds,
+                                        trials=trials, eval_every=eval_every,
+                                        seed=5, rng="fast")
+            peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+            scale_results.append({
+                "scheme": agg.name, "key": key, "n_devices": n_devices,
+                "dim": task.dim, "rounds": rounds, "trials": trials,
+                "jax_cold_s": t_cold, "jax_warm_s": t_warm,
+                "rounds_per_s": rounds * trials / t_warm,
+                "final_loss": float(log.global_loss[:, -1].mean()),
+                "peak_rss_mb": peak,
+                # what replay mode would have materialized host-side for
+                # this run: (trials, T, d) float64 AWGN + (trials, T, N)
+                # complex128 fading
+                "replay_host_mb": trials * rounds *
+                    (task.dim * 8 + n_devices * 16) / 2 ** 20,
+            })
+        del trainer, task, ds, dep
+
+    # fig2-scale end-to-end: replay's per-trial host precompute + transfer
+    # vs fast's in-scan streams, same scheme, same horizon
+    task, ds, dep, eta_max = make_sc_setup(20, samples_per_device=1000,
+                                           n_train_per_class=2000)
+    cfg = dep.cfg
+    agg = B.VanillaOTA(task.dim, task.g_max, cfg.energy_per_symbol,
+                       cfg.noise_power)
+    trainer = FLTrainer(task, ds, dep, eta=0.25 * eta_max)
+    fig2_eval = max(fig2_rounds // 10, 1)
+    t_replay, _ = _time_backend(trainer, agg, "jax", rounds=fig2_rounds,
+                                trials=fig2_trials, eval_every=fig2_eval,
+                                seed=5, repeats=3, rng="replay")
+    t_fast, _ = _time_backend(trainer, agg, "jax", rounds=fig2_rounds,
+                              trials=fig2_trials, eval_every=fig2_eval,
+                              seed=5, repeats=3, rng="fast")
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    payload = result_payload(
+        "engine_bench_scale", quick=quick,
+        scale={"samples_per_device": samples_per_device,
+               "n_grid": list(n_grid), "results": scale_results},
+        fig2_speedup={
+            "scheme": agg.name, "n_devices": 20, "dim": task.dim,
+            "rounds": fig2_rounds, "trials": fig2_trials,
+            "replay_warm_s": t_replay, "fast_warm_s": t_fast,
+            "speedup_fast": t_replay / t_fast,
+            "replay_host_mb": fig2_trials * fig2_rounds *
+                (task.dim * 8 + 20 * 16) / 2 ** 20,
+        },
+        peak_rss_mb=peak_rss_mb, rss_budget_mb=rss_budget_mb)
+    out = Path(__file__).resolve().parents[1] / "BENCH_engine_scale.json"
+    out.write_text(dump_json(payload))
+    rows = [(f"engine_bench_scale/N{r['n_devices']}/{r['key']}",
+             r["jax_warm_s"] * 1e6 / max(rounds * trials, 1),
+             f"rps={r['rounds_per_s']:.0f};rss={r['peak_rss_mb']:.0f}MB")
+            for r in scale_results]
+    return rows, payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -246,9 +365,41 @@ def main() -> None:
                          "sampling vs the NumPy oracle loop)")
     ap.add_argument("--digital-long", action="store_true",
                     help="1500-round digital engine run + peak-RSS record")
+    ap.add_argument("--scale", action="store_true",
+                    help="population-scale fast-RNG grid (N up to 1024 at "
+                         "fig2 d) + fig2 replay-vs-fast speedup; writes "
+                         "top-level BENCH_engine_scale.json")
     ap.add_argument("--rss-budget-mb", type=float, default=None,
-                    help="with --digital-long: exit 1 if peak RSS exceeds")
+                    help="with --digital-long/--scale: exit 1 if peak RSS "
+                         "exceeds")
     args = ap.parse_args()
+    if args.scale:
+        if args.smoke:
+            rows, payload = run_scale(
+                quick=True, n_grid=(1024,), rounds=20, trials=1,
+                fig2_rounds=120, fig2_trials=6,
+                rss_budget_mb=args.rss_budget_mb)
+        else:
+            rows, payload = run_scale(quick=False,
+                                      rss_budget_mb=args.rss_budget_mb)
+        for r in payload["scale"]["results"]:
+            print(f"N={r['n_devices']} {r['key']}: {r['rounds']}x"
+                  f"{r['trials']} rounds in {r['jax_warm_s']:.2f}s warm "
+                  f"({r['rounds_per_s']:.0f} rounds/s, "
+                  f"RSS {r['peak_rss_mb']:.0f} MB)")
+        f2 = payload["fig2_speedup"]
+        print(f"fig2-scale ({f2['scheme']}, {f2['rounds']}x{f2['trials']}): "
+              f"replay {f2['replay_warm_s']:.2f}s vs fast "
+              f"{f2['fast_warm_s']:.2f}s -> {f2['speedup_fast']:.2f}x")
+        print(f"peak RSS {payload['peak_rss_mb']:.0f} MB "
+              f"-> BENCH_engine_scale.json")
+        if (args.rss_budget_mb is not None
+                and payload["peak_rss_mb"] > args.rss_budget_mb):
+            print(f"FAIL: peak RSS exceeds budget "
+                  f"{args.rss_budget_mb:.0f} MB — is a replay tensor "
+                  "materialized in fast mode?", file=sys.stderr)
+            sys.exit(1)
+        return
     if args.digital_long:
         payload = run_digital_long()
         for r in payload["results"]:

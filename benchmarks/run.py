@@ -32,6 +32,11 @@ def _registry() -> dict:
         "engine_bench_minibatch": types.SimpleNamespace(
             run=engine_bench.run_minibatch,
             **{"__doc__": engine_bench.run_minibatch.__doc__}),
+        # fast-RNG population-scale grid + fig2 replay-vs-fast record
+        # (writes the top-level BENCH_engine_scale.json perf trajectory)
+        "engine_bench_scale": types.SimpleNamespace(
+            run=engine_bench.run_scale,
+            **{"__doc__": engine_bench.run_scale.__doc__}),
         "design_bench": design_bench,
         "fig2_ota_sc": fig2_ota_sc,
         "fig2_digital_sc": fig2_digital_sc,

@@ -10,13 +10,22 @@ the Monte-Carlo simulations through the vmap/scan JAX engine
 (``FLTrainer.run(backend="auto")``), and lands a cached, manifest-tracked
 ``ResultSet``: re-running a finished sweep is a no-op.
 
+Two execution knobs matter at scale (see ROADMAP.md "RNG modes"):
+``run.rng`` — "replay" is byte-compatible with the NumPy oracle's random
+streams, "fast" regenerates every stream counter-based inside the scan
+(zero host-side per-trial precompute; same laws, different stream) — and
+``execute(..., jobs=K)``, which runs non-cached cells on a K-worker
+process pool with serial-identical artifacts. Both are demoed below:
+``run.rng`` is swept as an ordinary axis and the grid executes with
+``jobs=2``.
+
     PYTHONPATH=src python examples/quickstart.py
 
 The same sweeps drive the figure pipelines and the CLI:
 
     PYTHONPATH=src python -m repro.api.cli list
     PYTHONPATH=src python -m repro.api.cli describe snr_het
-    PYTHONPATH=src python -m repro.api.cli run sweep_smoke
+    PYTHONPATH=src python -m repro.api.cli run sweep_smoke --jobs 2
 """
 import tempfile
 import time
@@ -42,19 +51,23 @@ def main():
         run=RunSpec(rounds=80, trials=2, eval_every=20, etas=(1.0,)),
         schemes=("ideal", "proposed_ota", "vanilla_ota"))
 
-    # ... and a sweep: the bias-variance trade-off (omega_bias) x SNR grid.
-    # Any dotted spec path is a sweepable axis.
+    # ... and a sweep: the bias-variance trade-off (omega_bias) crossed
+    # with the RNG execution mode. Any dotted spec path is a sweepable
+    # axis — run.rng="fast" here runs the exact same protocol on in-scan
+    # counter-based streams (the at-scale mode).
     sweep = SweepSpec(name="quickstart", base=base,
-                      axes={"design.omega_bias_scale": (0.1, 1.0, 10.0),
-                            "wireless.tx_power_dbm": (0.0,)})
+                      axes={"design.omega_bias_scale": (0.1, 10.0),
+                            "run.rng": ("replay", "fast")})
 
-    # The plan shows the compiled work before anything runs: 3 cells, and
+    # The plan shows the compiled work before anything runs: 4 cells, and
     # ONE batched design solve covering all of them.
     print(plan(sweep).describe(), "\n")
 
     with tempfile.TemporaryDirectory() as out:
+        # jobs=2: non-cached cells run on a 2-worker process pool (the CLI
+        # spelling is `run ... --jobs 2`); artifacts match a serial run
         t0 = time.perf_counter()
-        rs = execute(sweep, out_dir=out,
+        rs = execute(sweep, out_dir=out, jobs=2,
                      progress=lambda m: print(f"  {m}"))
         print(f"\nexecuted in {time.perf_counter() - t0:.1f}s "
               f"(git {rs.manifest['git_rev'][:10]})")
@@ -62,8 +75,9 @@ def main():
         for cell in rs:
             p = cell.payload
             scale = p["overrides"]["design.omega_bias_scale"]
+            rng = p["overrides"]["run.rng"]
             accs = {r["scheme_key"]: r["acc_mean"][-1] for r in p["logs"]}
-            print(f"omega_bias x{scale:<5g} design_obj="
+            print(f"omega_bias x{scale:<5g} rng={rng:6s} design_obj="
                   f"{p['design']['ota']['objective']:9.3f}  "
                   + "  ".join(f"{k}={v:.3f}" for k, v in accs.items()))
 
@@ -75,9 +89,11 @@ def main():
 
     # The trained trajectories are plain arrays — e.g. the bias-variance
     # trade-off: more omega_bias weight pushes the design toward uniform
-    # participation (less bias, more noise), and vice versa.
+    # participation (less bias, more noise), and vice versa. Cell 1 is
+    # the fast-RNG run of the omega x0.1 point: same law, different
+    # stream, statistically equivalent trajectory.
     rec = rs.cell(1).log("proposed_ota")
-    print("\nproposed OTA acc trajectory (omega x1):",
+    print("\nproposed OTA acc trajectory (omega x0.1, rng=fast):",
           np.round(rec["acc_mean"], 3))
 
 

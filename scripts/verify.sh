@@ -14,10 +14,14 @@
 # 1500-round digital engine horizon under a fixed peak-RSS budget — the
 # streaming-dither O(N*d) memory contract (a rematerialized
 # (trials, T, N, d) dither tensor would blow the budget by ~1.9 GB) —
+# the fast-RNG gates (rng="fast" statistical equivalence vs the replay
+# oracle plus the population-scale grid: N=1024 at fig2 dimension under
+# the same 2 GB RSS budget, recorded to BENCH_engine_scale.json),
 # and the declarative scenario-sweep smoke: a 2x2 grid through
-# `python -m repro.api.cli run sweep_smoke` (one batched design solve for
-# the grid), asserting the ResultSet manifest is written and that
-# re-running the finished sweep is a cache no-op (--expect-cached).
+# `python -m repro.api.cli run sweep_smoke --jobs 2` (one batched design
+# solve for the grid, cells on a 2-worker spawn pool), asserting the
+# ResultSet manifest is written and that re-running the finished sweep
+# is a cache no-op (--expect-cached).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -46,22 +50,33 @@ echo "== digital engine 1500-round horizon (peak-RSS guard) =="
 python -m benchmarks.engine_bench --digital-long --rss-budget-mb 2048
 mem_status=$?
 
-echo "== scenario sweep smoke (2x2 grid; manifest + cache no-op) =="
-# fresh 2x2 sweep through the declarative CLI, then assert the manifest
-# landed and a re-run of the finished sweep is a pure cache hit
+echo "== fast-RNG statistical equivalence (rng='fast' vs replay oracle) =="
+python -m pytest -q tests/test_rng_fast.py
+fastrng_status=$?
+
+echo "== fast-RNG population scale (N=1024 @ fig2 dim; peak-RSS guard) =="
+python -m benchmarks.engine_bench --scale --smoke --rss-budget-mb 2048
+scale_status=$?
+
+echo "== scenario sweep smoke (2x2 grid, --jobs 2; manifest + cache no-op) =="
+# fresh 2x2 sweep through the declarative CLI on a 2-worker pool, then
+# assert the manifest landed and a re-run of the finished sweep is a pure
+# cache hit (the parallel run must leave serial-identical artifacts)
 sweep_dir="experiments/results/scenarios/sweep_smoke"
 rm -rf "$sweep_dir"
-python -m repro.api.cli run sweep_smoke \
+python -m repro.api.cli run sweep_smoke --jobs 2 \
     && test -f "$sweep_dir/manifest.json" \
     && python -m repro.api.cli run sweep_smoke --expect-cached
 sweep_status=$?
 
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
         || [ "$minibatch_status" -ne 0 ] || [ "$design_status" -ne 0 ] \
-        || [ "$mem_status" -ne 0 ] || [ "$sweep_status" -ne 0 ]; then
+        || [ "$mem_status" -ne 0 ] || [ "$fastrng_status" -ne 0 ] \
+        || [ "$scale_status" -ne 0 ] || [ "$sweep_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
          "minibatch=$minibatch_status design=$design_status" \
-         "mem=$mem_status sweep=$sweep_status)" >&2
+         "mem=$mem_status fastrng=$fastrng_status scale=$scale_status" \
+         "sweep=$sweep_status)" >&2
     exit 1
 fi
 echo "verify OK"

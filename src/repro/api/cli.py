@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.api.cli list
     PYTHONPATH=src python -m repro.api.cli describe fig2_ota_sc
     PYTHONPATH=src python -m repro.api.cli run sweep_smoke [--out DIR]
+    PYTHONPATH=src python -m repro.api.cli run sweep_smoke --jobs 2
     PYTHONPATH=src python -m repro.api.cli run my_sweep.json --full
 
 ``run``/``describe`` accept a registered name (``list`` shows them) or a
@@ -59,7 +60,7 @@ def _cmd_run(args) -> int:
     spec = _load_spec(args.spec, quick=not args.full)
     pl = plan(spec)
     out_dir = Path(args.out) if args.out else default_out_dir(pl.name)
-    rs = execute(pl, out_dir=out_dir, force=args.force,
+    rs = execute(pl, out_dir=out_dir, force=args.force, jobs=args.jobs,
                  progress=lambda msg: print(msg, flush=True))
     computed = sum(c.status == "computed" for c in rs.cells)
     cached = sum(c.status == "cached" for c in rs.cells)
@@ -93,6 +94,9 @@ def main(argv=None) -> int:
                    help="paper-scale variant of a registered spec")
     p.add_argument("--force", action="store_true",
                    help="recompute cached cells")
+    p.add_argument("--jobs", type=int, default=1, metavar="K",
+                   help="run non-cached cells on a K-worker process pool "
+                        "(same manifest and resume semantics as serial)")
     p.add_argument("--expect-cached", action="store_true",
                    help="exit 1 if any cell was (re)computed")
 

@@ -16,6 +16,17 @@
 4. **Artifact** — per-cell payloads + a manifest (sweep spec + hash, git
    rev, per-cell status/timings) land under ``out_dir``; re-running a
    half-finished sweep recomputes only the missing cells.
+
+``execute(..., jobs=K)`` runs independent cells on a ``K``-worker spawn
+process pool: the main process still does the cache check and the grouped
+batched design solves (walking ``Plan.schedule()`` so every group lands
+before its dependents), then ships each cell to a worker as pure data —
+the scenario dict, the solved design parameters ("design pack") and the
+memoized kappa estimates — because live contexts hold jitted closures and
+don't pickle. Workers write ``cells/<hash>.json`` the moment a cell
+finishes and errors are collected (not fail-fast), so a crashed or
+cancelled parallel sweep resumes exactly like a serial one; the manifest
+is byte-identical to serial execution (modulo wall-clock timings).
 """
 from __future__ import annotations
 
@@ -28,10 +39,11 @@ from typing import Callable, Optional
 from ..core import digital_design, ota_design
 from . import materialize as mat
 from . import schemes
-from .plan import Plan, plan as make_plan
+from .plan import Cell, Plan, plan as make_plan
 from .results import (DEFAULT_RESULTS_ROOT, SCHEMA_VERSION, CellResult,
                       ResultSet, dump_json, git_rev, log_record,
                       result_payload)
+from .spec import ScenarioSpec
 
 
 def default_out_dir(name: str) -> Path:
@@ -116,17 +128,126 @@ def _run_cell(cell, ctx) -> dict:
         design=design, logs=logs, elapsed_s=time.perf_counter() - t0)
 
 
+def _design_pack(ctx) -> tuple:
+    """A cell's solved design parameters as picklable pure data.
+
+    Parameter dataclasses hold only numpy arrays/scalars, so they cross
+    the spawn boundary; workers replay the pack with ``set_design`` and
+    never touch a design solver.
+    """
+    pack = []
+    for prefix, family in (("ota", "ota"), ("dig", "digital")):
+        for variant, suffix in (("designed", ""), ("direct", "_direct")):
+            params = getattr(ctx, f"{prefix}_params{suffix}")
+            if params is not None:
+                pack.append((family, variant, params,
+                             getattr(ctx, f"{prefix}_objective{suffix}")))
+    return tuple(pack)
+
+
+#: process-global memo so one worker builds each dataset/task/deployment
+#: once across all the cells it is handed
+_WORKER_MEMO = None
+
+
+def _worker_run_cell(job):
+    """Pool worker: re-materialize one cell from pure data and run it."""
+    (scenario_dict, index, overrides, cell_hash, design_pack, memo_seed,
+     cells_dir) = job
+    global _WORKER_MEMO
+    if _WORKER_MEMO is None:
+        _WORKER_MEMO = mat.new_memo()
+    # seed the sweep-level kappa estimates so workers never re-run the
+    # w*-GD estimation the main process (or a sibling) already did
+    _WORKER_MEMO._store.update(memo_seed)
+    scenario = ScenarioSpec.from_dict(scenario_dict)
+    ctx = mat.materialize(scenario, _WORKER_MEMO)
+    for family, variant, params, objective in design_pack:
+        ctx.set_design(family, variant, params, objective)
+    cell = Cell(index=index, overrides=overrides, scenario=scenario,
+                cell_hash=cell_hash)
+    payload = _run_cell(cell, ctx)
+    if cells_dir is not None:
+        d = Path(cells_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        (d / f"{cell_hash}.json").write_text(dump_json(payload))
+    return index, payload
+
+
+def _run_parallel(pl: Plan, todo, contexts, memo, cells_dir: Path,
+                  save: bool, jobs: int, say, results) -> None:
+    """Dispatch non-cached cells to a spawn pool, designs solved inline.
+
+    Spawn (not fork): the parent has long since initialized JAX, and
+    forking a process with a live XLA runtime is undefined behavior.
+    Errors are collected, not fail-fast — completed cells persist their
+    ``cells/<hash>.json`` first, so the re-run resumes from them.
+    """
+    import multiprocessing as mp
+    from concurrent.futures import ProcessPoolExecutor, as_completed
+
+    todo_idx = {c.index for c in todo}
+    memo_seed = {k: v for k, v in memo._store.items()
+                 if isinstance(k, tuple) and k and k[0] == "kappa"}
+    futures = {}
+    with ProcessPoolExecutor(
+            max_workers=min(jobs, len(todo)),
+            mp_context=mp.get_context("spawn")) as pool:
+        for kind, item in pl.schedule():
+            if kind == "design":
+                live = [i for i in item.cell_indices if i in todo_idx]
+                if not live:
+                    continue
+                say(f"design {item.family} (N={item.n_devices}): "
+                    f"{len(live)} point(s), "
+                    + ("one batched jit" if item.batched else item.solver))
+                _solve_group(_filtered(item, live), contexts)
+            elif item.index in todo_idx:
+                cell = item
+                job = (cell.scenario.to_dict(), cell.index, cell.overrides,
+                       cell.cell_hash, _design_pack(contexts[cell.index]),
+                       memo_seed, str(cells_dir) if save else None)
+                say(f"cell {cell.index} [{cell.cell_hash}] -> worker "
+                    f"({len(schemes.expand_schemes(cell.scenario.schemes))} "
+                    "schemes)")
+                futures[pool.submit(_worker_run_cell, job)] = cell
+        errors = []
+        for fut in as_completed(futures):
+            cell = futures[fut]
+            try:
+                index, payload = fut.result()
+            except BaseException as err:       # noqa: BLE001 — collected
+                errors.append((cell, err))
+                continue
+            results[index] = CellResult(
+                index=index, cell_hash=cell.cell_hash,
+                overrides=cell.overrides, status="computed",
+                path=cells_dir / f"{cell.cell_hash}.json" if save else None,
+                payload=payload)
+            say(f"cell {cell.index} [{cell.cell_hash}] done")
+    if errors:
+        cell, err = errors[0]
+        raise RuntimeError(
+            f"{len(errors)} of {len(futures)} sweep cell(s) failed in "
+            f"workers (first: cell {cell.index} [{cell.cell_hash}]); "
+            "completed cells are cached — re-run to resume") from err
+
+
 def execute(spec_or_plan, *, out_dir: Optional[Path] = None,
-            force: bool = False, save: bool = True,
+            force: bool = False, save: bool = True, jobs: int = 1,
             progress: Optional[Callable[[str], None]] = None) -> ResultSet:
     """Execute a scenario/sweep/plan into a ``ResultSet``.
 
     ``force=True`` ignores (and overwrites) cached cells; ``save=False``
-    keeps the result in memory only (used by tests).
+    keeps the result in memory only (used by tests); ``jobs=K`` (K > 1)
+    runs non-cached cells on a K-worker process pool — same manifest,
+    same per-cell artifacts, same resume semantics as serial.
     """
     say = progress if progress is not None else (lambda msg: None)
     pl = (spec_or_plan if isinstance(spec_or_plan, Plan)
           else make_plan(spec_or_plan))
+    if jobs < 1:
+        raise ValueError(f"jobs must be >= 1, got {jobs}")
     out_dir = Path(out_dir) if out_dir is not None else \
         default_out_dir(pl.name)
     cells_dir = out_dir / "cells"
@@ -147,34 +268,44 @@ def execute(spec_or_plan, *, out_dir: Optional[Path] = None,
             todo.append(cell)
 
     # materialize every non-cached cell (memoized across the sweep), then
-    # solve each design group's grid in one batched call
+    # walk the dependency-ordered schedule: each design group's grid
+    # solves in one batched call right before its first dependent cell
     memo = mat.new_memo()
     contexts = {c.index: mat.materialize(c.scenario, memo) for c in todo}
     todo_idx = set(contexts)
-    for group in pl.design_groups:
-        live = [i for i in group.cell_indices if i in todo_idx]
-        if not live:
-            continue
-        say(f"design {group.family} (N={group.n_devices}): "
-            f"{len(live)} point(s), "
-            + ("one batched jit" if group.batched else group.solver))
-        _solve_group(_filtered(group, live), contexts)
-
-    for cell in todo:
-        say(f"cell {cell.index} [{cell.cell_hash}] running "
-            f"{len(schemes.expand_schemes(cell.scenario.schemes))} schemes")
-        payload = _run_cell(cell, contexts[cell.index])
-        path = None
-        if save:
-            # persist each cell the moment it completes so an interrupted
-            # sweep resumes from the finished cells, not from scratch
-            path = cells_dir / f"{cell.cell_hash}.json"
-            cells_dir.mkdir(parents=True, exist_ok=True)
-            path.write_text(dump_json(payload))
-        results[cell.index] = CellResult(
-            index=cell.index, cell_hash=cell.cell_hash,
-            overrides=cell.overrides, status="computed",
-            path=path, payload=payload)
+    if jobs > 1 and todo:
+        _run_parallel(pl, todo, contexts, memo, cells_dir, save, jobs,
+                      say, results)
+    else:
+        for kind, item in pl.schedule():
+            if kind == "design":
+                live = [i for i in item.cell_indices if i in todo_idx]
+                if not live:
+                    continue
+                say(f"design {item.family} (N={item.n_devices}): "
+                    f"{len(live)} point(s), "
+                    + ("one batched jit" if item.batched else item.solver))
+                _solve_group(_filtered(item, live), contexts)
+                continue
+            cell = item
+            if cell.index not in todo_idx:
+                continue
+            say(f"cell {cell.index} [{cell.cell_hash}] running "
+                f"{len(schemes.expand_schemes(cell.scenario.schemes))} "
+                "schemes")
+            payload = _run_cell(cell, contexts[cell.index])
+            path = None
+            if save:
+                # persist each cell the moment it completes so an
+                # interrupted sweep resumes from the finished cells, not
+                # from scratch
+                path = cells_dir / f"{cell.cell_hash}.json"
+                cells_dir.mkdir(parents=True, exist_ok=True)
+                path.write_text(dump_json(payload))
+            results[cell.index] = CellResult(
+                index=cell.index, cell_hash=cell.cell_hash,
+                overrides=cell.overrides, status="computed",
+                path=path, payload=payload)
 
     ordered = [results[c.index] for c in pl.cells]
     manifest = result_payload(

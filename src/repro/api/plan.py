@@ -75,6 +75,26 @@ class Plan:
                             if g.needs_direct else ""))
         return "\n".join(lines)
 
+    def schedule(self) -> tuple:
+        """Dependency-ordered work list: ``("design", group)`` /
+        ``("cell", cell)`` entries, each design group placed immediately
+        before its first member cell. Because a group's first member is
+        its minimum cell index, *every* group a cell belongs to precedes
+        that cell — so a walk in schedule order (serial executor) or a
+        solve-then-dispatch walk (parallel executor) never reaches a cell
+        whose batched design is still unsolved.
+        """
+        first: dict = {}
+        for g in sorted(self.design_groups,
+                        key=lambda g: (min(g.cell_indices), g.family)):
+            first.setdefault(min(g.cell_indices), []).append(g)
+        entries = []
+        for cell in self.cells:
+            for g in first.get(cell.index, ()):
+                entries.append(("design", g))
+            entries.append(("cell", cell))
+        return tuple(entries)
+
 
 def plan(spec) -> Plan:
     """Compile a scenario/sweep into cells + grouped design work."""

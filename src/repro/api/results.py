@@ -29,7 +29,9 @@ import numpy as np
 
 #: Bumped whenever the result payload layout changes; cached scenario
 #: cells from older schema versions are recomputed, not reused.
-SCHEMA_VERSION = 2
+#: v3: RunSpec gained ``rng`` (replay|fast execution mode) — spec dicts,
+#: and therefore every content hash, changed layout.
+SCHEMA_VERSION = 3
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_RESULTS_ROOT = Path(os.environ.get(

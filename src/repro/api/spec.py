@@ -12,7 +12,8 @@ A ``SweepSpec`` declares grids over any spec axis by dotted path —
 ``wireless.tx_power_dbm`` (SNR), ``wireless.n_devices``,
 ``wireless.pl_exponent`` (path-loss heterogeneity),
 ``design.omega_bias_scale``, ``run.batch_size``, ``run.time_budget_s``,
-... — and expands to the cross product of override-applied scenarios
+``run.rng`` (replay vs fast execution), ... — and expands to the cross
+product of override-applied scenarios
 (``points()``).
 """
 from __future__ import annotations
@@ -89,6 +90,7 @@ class RunSpec:
     batch_size: Optional[int] = None     # None -> full batch (|B|=|D|)
     time_budget_s: Optional[float] = None
     backend: str = "auto"
+    rng: str = "replay"                  # "replay" (oracle-exact) | "fast"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -91,6 +91,24 @@ def sample_fading(lambdas: np.ndarray, seed: int, t: int) -> np.ndarray:
     return re + 1j * im
 
 
+def sample_fading_jax(key, t, lambdas):
+    """Counter-based h_{m,t} ~ CN(0, Lambda_m) for fast-mode engine scans.
+
+    ``key`` is the trial's ``rngstream.stream_base_key(seed, trial,
+    FADING_TAG)``; ``t`` may be a traced scalar, so the draw is a pure
+    threefry function of ``(seed, trial, t)`` computable inside
+    ``lax.scan`` — no per-trial ``sample_fading_batch`` host tensor.
+    Same Rayleigh law as :func:`sample_fading` (|h|^2 ~ Exp(Lambda_m)),
+    different stream: statistically equivalent to replay, not bit-equal.
+    """
+    import jax
+    import jax.numpy as jnp
+    z = jax.random.normal(jax.random.fold_in(key, t),
+                          (2,) + jnp.shape(lambdas), dtype=jnp.float64)
+    scale = jnp.sqrt(jnp.asarray(lambdas) / 2.0)
+    return (z[0] + 1j * z[1]) * scale
+
+
 def sample_fading_batch(lambdas: np.ndarray, seed: int,
                         rounds: int) -> np.ndarray:
     """Batched fading tensor (T, N): rows t = 0..rounds-1 of the same stream

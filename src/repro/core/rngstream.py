@@ -35,6 +35,17 @@ Selection randomness (UQOS' sampling permutation/keys, QML's and FedTOE's
 tiny (O(N) per round) and the engine replays them offline with
 :func:`replay_rounds`, feeding the raw draws into the scan as small
 ``(T, S)`` inputs.
+
+Fast mode (``FLTrainer.run(..., rng="fast")``) extends the counter-based
+design to *every* stream: PS AWGN (:func:`noise_block`, NOISE_TAG),
+Rayleigh fading (FADING_TAG, sampled by ``channel.sample_fading_jax``)
+and the per-round selection draws (SELECT_TAG, per-port ``sel_stream_jax``
+samplers in the engine) become pure threefry functions of
+``(seed, trial, round, stream)`` via :func:`stream_base_key`, generated
+inside the scan with zero host-side per-trial precompute. Fast-mode draws
+are i.i.d. from the same laws as the oracle's but form a *different*
+stream — statistically equivalent (``tests/test_rng_fast.py``'s
+mean-trajectory gate), not bit-equal to replay.
 """
 from __future__ import annotations
 
@@ -52,12 +63,43 @@ DITHER_TAG = 17
 #: the two counter-based streams of a trial never alias).
 BATCH_TAG = 29
 
+#: Fast-mode stream tags (``rng="fast"`` only; replay mode never derives
+#: these, so the oracle-parity streams above are untouched).
+NOISE_TAG = 41    # PS AWGN z01 draws
+FADING_TAG = 43   # Rayleigh fading (consumed via channel.sample_fading_jax)
+SELECT_TAG = 47   # device-selection draws (per-port sel_stream_jax)
+
+
+def stream_base_key(seed: int, trial: int, tag: int) -> jax.Array:
+    """Per-(trial, stream) threefry base key: fold (seed, trial, tag).
+
+    The one key-derivation rule behind every counter-based stream; round
+    (and optionally device) indices are folded in later by the samplers,
+    so any draw is a pure function of ``(seed, trial, tag, t[, m])``.
+    """
+    key = jax.random.PRNGKey(int(seed) & 0xFFFFFFFF)
+    key = jax.random.fold_in(key, int(trial))
+    return jax.random.fold_in(key, int(tag))
+
+
+def noise_block(key: jax.Array, t, d: int) -> jnp.ndarray:
+    """(d,) float64 standard-normal AWGN draws for round ``t`` (fast mode).
+
+    ``key`` is the trial's ``stream_base_key(seed, trial, NOISE_TAG)``;
+    ``t`` may be a traced scalar, so the engine folds the round index
+    inside ``lax.scan`` — the replay path's (T, d) host block never
+    exists. Drawn in float32 and widened (exactly like the dither
+    stream): same N(0, 1) law to well below Monte-Carlo resolution at
+    half the in-scan threefry cost — fast mode never bit-matches the
+    oracle's float64 ``standard_normal`` stream anyway.
+    """
+    return jax.random.normal(jax.random.fold_in(key, t), (d,),
+                             dtype=jnp.float32).astype(jnp.float64)
+
 
 def dither_base_key(seed: int, trial: int) -> jax.Array:
     """Per-trial base key for the dither stream (threefry, counter-based)."""
-    key = jax.random.PRNGKey(int(seed) & 0xFFFFFFFF)
-    key = jax.random.fold_in(key, int(trial))
-    return jax.random.fold_in(key, DITHER_TAG)
+    return stream_base_key(seed, trial, DITHER_TAG)
 
 
 def dither_block(key: jax.Array, t, n: int, d: int) -> jnp.ndarray:
@@ -89,9 +131,7 @@ def dither_block_np(seed: int, trial: int, t: int, n: int, d: int,
 
 def batch_base_key(seed: int, trial: int) -> jax.Array:
     """Per-trial base key for the mini-batch index stream (threefry)."""
-    key = jax.random.PRNGKey(int(seed) & 0xFFFFFFFF)
-    key = jax.random.fold_in(key, int(trial))
-    return jax.random.fold_in(key, BATCH_TAG)
+    return stream_base_key(seed, trial, BATCH_TAG)
 
 
 def batch_indices(key: jax.Array, t, m, n_data: int,
@@ -122,6 +162,26 @@ def batch_block(key: jax.Array, t, n_devices: int, n_data: int,
     return jax.vmap(
         lambda k: jax.random.choice(k, n_data, (batch_size,), replace=False)
     )(keys).astype(jnp.int32)
+
+
+def batch_block_ragged(key: jax.Array, t, sizes: tuple,
+                       batch_size: int) -> jnp.ndarray:
+    """(len(sizes), batch_size) int32 batch indices for round ``t`` when
+    device datasets have *unequal* sizes.
+
+    Row ``m`` samples ``range(sizes[m])`` without replacement with the key
+    ``fold_in(fold_in(key, t), m)`` — bit-identical to the per-device
+    :func:`batch_indices` draw the NumPy oracle makes with each device's
+    own ``n_data``, so the engine's padded-stack gather sees the exact
+    oracle batches. ``sizes`` must be static (trace-time Python ints);
+    every row needs ``batch_size <= sizes[m]``, and indices never reach
+    the padding rows (``idx < sizes[m] <= n_max``).
+    """
+    kt = jax.random.fold_in(key, t)
+    rows = [jax.random.choice(jax.random.fold_in(kt, m), int(n_m),
+                              (batch_size,), replace=False)
+            for m, n_m in enumerate(sizes)]
+    return jnp.stack(rows).astype(jnp.int32)
 
 
 def _batch_key_np(seed: int, trial: int, _key_cache: dict = {}) -> jax.Array:

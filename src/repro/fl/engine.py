@@ -12,6 +12,21 @@ per-device gradient scoring (norm/quantization-MSE selection) through
 scheme in ``core.baselines`` has a port registered in ``_PORT_FACTORIES``,
 so ``backend="jax"`` covers the paper's full Sec. V comparison suite.
 
+Two RNG execution modes (``run(..., rng=...)``):
+
+  * ``rng="replay"`` (default) — bit-reproduces the NumPy oracle's random
+    streams (contract below), at the cost of O(T*(d+S)) host-side NumPy
+    precompute per trial (AWGN blocks, fading stacks, selection replays)
+    before the jitted scan starts;
+  * ``rng="fast"`` — every stream (AWGN, fading, dither, selection, batch
+    indices) is generated counter-based *inside* the scan, threefry-keyed
+    on ``(seed, trial, round, stream)`` (``core.rngstream`` tags), with
+    zero host-side per-trial precompute and O(N*d) live memory. Same
+    distributions, different stream: statistically equivalent to replay
+    (mean trajectories match within MC tolerance,
+    ``tests/test_rng_fast.py``), not bit-equal — the mode for
+    population-scale N / trial counts where the replay tax dominates.
+
 RNG-replay contract — the engine reproduces the NumPy trainer's random
 streams, so the two backends agree per round to ~1e-5 over hundreds of
 rounds (``tests/test_engine_parity.py``):
@@ -66,7 +81,7 @@ from jax.experimental import enable_x64
 
 from ..core import baselines as B
 from ..core import rngstream
-from ..core.channel import Deployment, sample_fading_batch
+from ..core.channel import Deployment, sample_fading_batch, sample_fading_jax
 from ..core.digital import (capacity_rate_jnp, digital_round_jax,
                             greedy_bit_alloc_jax, topk_mask)
 from ..core.ota import bbfl_round_jax, opc_ota_fl_round_jax, ota_round_jax
@@ -102,6 +117,12 @@ class JaxAggregator:
     # draws the NumPy scheme consumes from the sequential trial rng (see
     # core.rngstream.replay_rounds); None when the scheme draws none
     sel_stream_np: Optional[Callable[[int, int, int], np.ndarray]] = None
+    # fast-mode analog of sel_stream_np: (round-folded threefry key) ->
+    # (S,) float64 row with the exact layout ``round_fn`` consumes, drawn
+    # in-scan from the SELECT_TAG stream. None when the scheme draws no
+    # selection randomness; a scheme with sel_stream_np but no fast
+    # sampler rejects rng="fast" instead of silently diverging
+    sel_stream_jax: Optional[Callable] = None
     # jitted trial runners keyed on (task id, shapes, schedule); kept on the
     # aggregator so step-size grid searches across trainer instances reuse
     # the compiled scan
@@ -341,6 +362,13 @@ def _uqos(agg: "B.UQOS", use_kernel: bool) -> JaxAggregator:
                                    rng.uniform(size=n)])
         return rngstream.replay_rounds(seed, trial, T, draw)
 
+    def sel_stream_jax(key):
+        # same row layout as the replay draw: permutation then uniforms
+        kp, ku = jax.random.split(key)
+        return jnp.concatenate([
+            jax.random.permutation(kp, n).astype(jnp.float64),
+            jax.random.uniform(ku, (n,), dtype=jnp.float64)])
+
     def round_fn(grads, h, z01, u, sel, t):
         order = sel[:n].astype(jnp.int32)
         keys = sel[n:] ** (1.0 / jnp.asarray(pi)[order])
@@ -358,7 +386,8 @@ def _uqos(agg: "B.UQOS", use_kernel: bool) -> JaxAggregator:
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
                          needs_noise=False, needs_dither=True,
-                         sel_stream_np=sel_stream)
+                         sel_stream_np=sel_stream,
+                         sel_stream_jax=sel_stream_jax)
 
 
 @register_port(B.QML)
@@ -377,6 +406,10 @@ def _qml(agg: "B.QML", use_kernel: bool) -> JaxAggregator:
         return rngstream.replay_rounds(
             seed, trial, T, lambda rng: rng.choice(n, size=k, replace=False))
 
+    def sel_stream_jax(key):
+        return jax.random.choice(key, n, (k,),
+                                 replace=False).astype(jnp.float64)
+
     def round_fn(grads, h, z01, u, sel, t):
         chi = jnp.zeros(n, grads.dtype).at[sel.astype(jnp.int32)].set(1.0)
         rate = capacity_rate_jnp(jnp.abs(h), e_s, n0)
@@ -386,7 +419,8 @@ def _qml(agg: "B.QML", use_kernel: bool) -> JaxAggregator:
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
                          needs_noise=False, needs_dither=True,
-                         sel_stream_np=sel_stream)
+                         sel_stream_np=sel_stream,
+                         sel_stream_jax=sel_stream_jax)
 
 
 @register_port(B.FedTOE)
@@ -400,6 +434,10 @@ def _fedtoe(agg: "B.FedTOE", use_kernel: bool) -> JaxAggregator:
     def sel_stream(seed, trial, T):
         return rngstream.replay_rounds(
             seed, trial, T, lambda rng: rng.choice(n, size=k, replace=False))
+
+    def sel_stream_jax(key):
+        return jax.random.choice(key, n, (k,),
+                                 replace=False).astype(jnp.float64)
 
     def round_fn(grads, h, z01, u, sel, t):
         bits, in_alloc = greedy_bit_alloc_jax(
@@ -415,7 +453,8 @@ def _fedtoe(agg: "B.FedTOE", use_kernel: bool) -> JaxAggregator:
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
                          needs_noise=False, needs_dither=True,
-                         sel_stream_np=sel_stream)
+                         sel_stream_np=sel_stream,
+                         sel_stream_jax=sel_stream_jax)
 
 
 def as_functional(agg, use_kernel: bool = True) -> Optional[JaxAggregator]:
@@ -470,14 +509,40 @@ class FLEngine:
         self.project_radius = project_radius
         self.use_kernel = use_kernel
         self.shard_trials = shard_trials
-        sizes = {len(d) for d in dataset.devices}
-        if len(sizes) != 1:
-            raise ValueError(
-                "FLEngine stacks device datasets: all devices must hold the "
-                f"same number of samples (got sizes {sorted(sizes)})")
-        self.batch_size = self.effective_batch_size(batch_size, sizes.pop())
-        self.xs = np.stack([d.x for d in dataset.devices]).astype(np.float32)
-        self.ys = np.stack([d.y for d in dataset.devices]).astype(np.int32)
+        sizes = tuple(len(d) for d in dataset.devices)
+        if len(set(sizes)) == 1:
+            self.device_sizes = None      # equal sizes: plain stacked arrays
+            self.batch_size = self.effective_batch_size(batch_size, sizes[0])
+            self.xs = np.stack(
+                [d.x for d in dataset.devices]).astype(np.float32)
+            self.ys = np.stack(
+                [d.y for d in dataset.devices]).astype(np.int32)
+        else:
+            # unequal sizes: zero-pad each device to n_max and regenerate
+            # per-device ragged batch indices in-scan (batch_block_ragged
+            # keys each row on that device's own size, so draws match the
+            # oracle's per-device batch_indices_np exactly and never touch
+            # the padding rows)
+            if batch_size is None:
+                raise ValueError(
+                    "FLEngine needs a mini-batch size when device datasets "
+                    f"have unequal sizes (got sizes {sorted(set(sizes))}); "
+                    "use backend='numpy' for full-batch unequal runs")
+            if batch_size >= min(sizes):
+                raise ValueError(
+                    f"batch_size ({batch_size}) must be smaller than the "
+                    f"smallest device dataset ({min(sizes)}) when device "
+                    "sizes are unequal")
+            self.device_sizes = sizes
+            self.batch_size = batch_size
+            n_max = max(sizes)
+            d0 = dataset.devices[0]
+            xs = np.zeros((len(sizes), n_max) + d0.x.shape[1:], np.float32)
+            ys = np.zeros((len(sizes), n_max), np.int32)
+            for m, dd in enumerate(dataset.devices):
+                xs[m, :len(dd)] = dd.x
+                ys[m, :len(dd)] = dd.y
+            self.xs, self.ys = xs, ys
         self.x_all = np.concatenate(
             [d.x for d in dataset.devices]).astype(np.float32)
         self.y_all = np.concatenate(
@@ -501,33 +566,59 @@ class FLEngine:
     # ------------------------------------------------------- scan runner
 
     def _get_runner(self, jagg: JaxAggregator, trials: int, n_seg: int,
-                    eval_every: int):
+                    eval_every: int, rng_mode: str):
         d, N = self.task.dim, self.dep.n_devices
+        if (rng_mode == "fast" and jagg.sel_stream_np is not None
+                and jagg.sel_stream_jax is None):
+            raise ValueError(
+                f"{jagg.name} consumes selection randomness but its JAX "
+                "port has no fast-mode sampler (sel_stream_jax); use "
+                "rng='replay'")
         # the task object itself keys (and pins) the gradient function;
         # everything else closed over by trial_fn is shape-static, and all
         # run-varying scalars (eta, radius, lat_div, budget) are traced
         # arguments
         key = (self.task, trials, n_seg, eval_every, d, N,
-               self.xs.shape, self.batch_size, self.use_kernel,
-               self.shard_trials)
+               self.xs.shape, self.batch_size, self.device_sizes,
+               self.use_kernel, self.shard_trials, rng_mode)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
         batch_size = self.batch_size
+        device_sizes = self.device_sizes
         n_data = self.xs.shape[1]
         grads_fn = (self.task.device_grads_fn if batch_size is None
                     else self.task.device_grads_at_fn)
         round_fn = jagg.round_fn
         needs_dither = jagg.needs_dither
+        needs_noise = jagg.needs_noise
+        sel_jax = jagg.sel_stream_jax
+        has_sel = jagg.sel_stream_np is not None
+        fast = rng_mode == "fast"
+        lambdas = jnp.asarray(self.dep.lambdas, jnp.float64)
 
         def trial_fn(w0, eta, radius, lat_div, budget, xs, ys, dkey, bkey,
-                     H, Z, SEL, Ts):
-            # dkey/bkey: scan-carried per-trial dither / batch-index keys;
-            # H: (n_seg, eval_every, N) complex; Z: (n_seg, eval_every, dz);
-            # SEL: (n_seg, eval_every, S); Ts: (n_seg, eval_every)
+                     A, B_, C, Ts):
+            # dkey/bkey: scan-carried per-trial dither / batch-index keys.
+            # replay: A=H (n_seg, eval_every, N) complex, B_=Z
+            # (n_seg, eval_every, dz), C=SEL (n_seg, eval_every, S) — host
+            # precomputed tensors fed through the scan.
+            # fast: A/B_/C are the trial's fading/noise/selection threefry
+            # base keys (uint32 (2,)); every draw is regenerated in-scan
+            # from (key, t), so nothing is precomputed and Ts is the only
+            # scan input. Same arity either way, so the vmap/shard_map
+            # plumbing below is mode-blind.
             def step(carry, inp):
                 w, t_wall, _, dkey, bkey = carry
-                h, z, selrow, t = inp
+                if fast:
+                    t = inp
+                    h = sample_fading_jax(A, t, lambdas)
+                    z = (rngstream.noise_block(B_, t, d) if needs_noise
+                         else jnp.zeros((1,), jnp.float64))
+                    selrow = (sel_jax(jax.random.fold_in(C, t)) if has_sel
+                              else jnp.zeros((1,), jnp.float64))
+                else:
+                    h, z, selrow, t = inp
                 # the trainer breaks on the first round whose *preceding*
                 # cumulative wall-clock hit the budget; past that round the
                 # carry freezes (w and t_wall stop advancing)
@@ -537,9 +628,15 @@ class FLEngine:
                                  ).astype(jnp.float64)
                 else:
                     # (N, B) counter-based indices regenerated in-scan —
-                    # bit-identical to the oracle's batch_block_np draw
-                    idx = rngstream.batch_block(bkey, t, N, n_data,
-                                                batch_size)
+                    # bit-identical to the oracle's batch_block_np /
+                    # batch_indices_np draws (ragged rows key on each
+                    # device's own size and never hit the padding)
+                    if device_sizes is not None:
+                        idx = rngstream.batch_block_ragged(
+                            bkey, t, device_sizes, batch_size)
+                    else:
+                        idx = rngstream.batch_block(bkey, t, N, n_data,
+                                                    batch_size)
                     g = grads_fn(w.astype(jnp.float32), xs, ys, idx
                                  ).astype(jnp.float64)
                 if needs_dither:
@@ -568,7 +665,8 @@ class FLEngine:
 
             carry0 = (w0, w0, jnp.zeros((), jnp.float64),
                       jnp.asarray(True), dkey, bkey)
-            _, (ws, walls) = jax.lax.scan(segment, carry0, (H, Z, SEL, Ts))
+            seg_xs = Ts if fast else (A, B_, C, Ts)
+            _, (ws, walls) = jax.lax.scan(segment, carry0, seg_xs)
             ws = jnp.concatenate([w0[None], ws], axis=0)          # (E, d)
             walls = jnp.concatenate([jnp.zeros((1,)), walls], axis=0)
             return ws, walls
@@ -602,7 +700,10 @@ class FLEngine:
     def run(self, aggregator, *, rounds: int, trials: int = 3,
             eval_every: int = 10, seed: int = 0,
             w_star: Optional[np.ndarray] = None,
-            time_budget_s: Optional[float] = None) -> TrainLog:
+            time_budget_s: Optional[float] = None,
+            rng: str = "replay") -> TrainLog:
+        if rng not in ("replay", "fast"):
+            raise ValueError(f"rng must be 'replay' or 'fast', got {rng!r}")
         jagg = as_functional(aggregator, use_kernel=self.use_kernel)
         if jagg is None:
             raise ValueError(
@@ -613,26 +714,37 @@ class FLEngine:
         T = n_seg * eval_every      # rounds past the last eval are unobserved
         d, N = self.task.dim, self.dep.n_devices
 
-        H = np.stack([sample_fading_batch(self.dep.lambdas,
-                                          seed * 1000 + tr, T)
-                      for tr in range(trials)])               # (trials, T, N)
-        if jagg.needs_noise:
-            Z = np.stack([rngstream.trial_rng(seed, tr)
-                          .standard_normal((T, d)) for tr in range(trials)])
+        if rng == "fast":
+            # zero host-side precompute: only three (2,)-uint32 base keys
+            # per trial; fading/noise/selection regenerate in-scan
+            H = jnp.stack([rngstream.stream_base_key(
+                seed, tr, rngstream.FADING_TAG) for tr in range(trials)])
+            Z = jnp.stack([rngstream.stream_base_key(
+                seed, tr, rngstream.NOISE_TAG) for tr in range(trials)])
+            SEL = jnp.stack([rngstream.stream_base_key(
+                seed, tr, rngstream.SELECT_TAG) for tr in range(trials)])
         else:
-            Z = np.zeros((trials, T, 1))
-        if jagg.sel_stream_np is not None:
-            SEL = np.stack([jagg.sel_stream_np(seed, tr, T)
-                            for tr in range(trials)])         # (trials, T, S)
-        else:
-            SEL = np.zeros((trials, T, 1))
+            H = np.stack([sample_fading_batch(self.dep.lambdas,
+                                              seed * 1000 + tr, T)
+                          for tr in range(trials)])           # (trials, T, N)
+            if jagg.needs_noise:
+                Z = np.stack([rngstream.trial_rng(seed, tr)
+                              .standard_normal((T, d))
+                              for tr in range(trials)])
+            else:
+                Z = np.zeros((trials, T, 1))
+            if jagg.sel_stream_np is not None:
+                SEL = np.stack([jagg.sel_stream_np(seed, tr, T)
+                                for tr in range(trials)])     # (trials, T, S)
+            else:
+                SEL = np.zeros((trials, T, 1))
         keys = jnp.stack([rngstream.dither_base_key(seed, tr)
                           for tr in range(trials)])
         bkeys = jnp.stack([rngstream.batch_base_key(seed, tr)
                            for tr in range(trials)])
 
         with enable_x64():
-            runner = self._get_runner(jagg, trials, n_seg, eval_every)
+            runner = self._get_runner(jagg, trials, n_seg, eval_every, rng)
             w0 = jnp.asarray(self.task.init_params(), jnp.float64)
             eta = jnp.asarray(self.eta, jnp.float64)
             radius = jnp.asarray(
@@ -644,12 +756,16 @@ class FLEngine:
             budget = jnp.asarray(
                 np.inf if time_budget_s is None else time_budget_s,
                 jnp.float64)
-            seg = lambda a: jnp.asarray(a).reshape(
-                (trials, n_seg, eval_every) + a.shape[2:])
             Ts = jnp.arange(T).reshape(n_seg, eval_every)
+            if rng == "fast":
+                A, B_, C = H, Z, SEL          # per-trial base keys as-is
+            else:
+                seg = lambda a: jnp.asarray(a).reshape(
+                    (trials, n_seg, eval_every) + a.shape[2:])
+                A, B_, C = seg(H), seg(Z), seg(SEL)
             ws, walls = runner(w0, eta, radius, lat_div, budget,
                                jnp.asarray(self.xs), jnp.asarray(self.ys),
-                               keys, bkeys, seg(H), seg(Z), seg(SEL), Ts)
+                               keys, bkeys, A, B_, C, Ts)
             losses, accs = self._evaluate(ws)
             opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
                        if w_star is not None else None)

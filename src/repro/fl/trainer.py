@@ -77,30 +77,53 @@ class FLTrainer:
             eval_every: int = 10, seed: int = 0,
             w_star: Optional[np.ndarray] = None,
             time_budget_s: Optional[float] = None,
-            backend: str = "auto") -> TrainLog:
+            backend: str = "auto", rng: str = "replay") -> TrainLog:
         """Run the Monte-Carlo FL protocol.
 
         backend: "numpy" — reference Python-loop path; "jax" — vectorized
         vmap/scan engine (``fl.engine``), errors if the scheme has no JAX
         port; "auto" (default) — the engine whenever the scheme is
         registered in its port routing table (all 14 paper baselines are),
-        NumPy otherwise. Mini-batching and time budgets run natively in the
-        engine: batch indices are counter-based (``core.rngstream``) and the
-        budget-freeze mask is evaluated in-scan, so both backends replay the
-        same random streams and trajectories agree to ~1e-5
-        (tests/test_engine_parity.py).
+        NumPy otherwise. Mini-batching, time budgets and unequal-sized
+        device datasets run natively in the engine: batch indices are
+        counter-based (``core.rngstream``, ragged per-device rows when
+        sizes differ) and the budget-freeze mask is evaluated in-scan, so
+        both backends replay the same random streams and trajectories agree
+        to ~1e-5 (tests/test_engine_parity.py).
+
+        rng: "replay" (default) — byte-compatible with the NumPy oracle's
+        sequential streams (fading/AWGN/selection precomputed per trial);
+        "fast" — every stream is counter-based threefry generated inside
+        the scan, zero host-side per-trial precompute and O(N*d) memory.
+        Fast draws come from the same laws but a different stream:
+        statistically equivalent to replay, not bit-equal. Engine-only —
+        errors on the NumPy path.
         """
         if backend not in ("auto", "jax", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
+        if rng not in ("replay", "fast"):
+            raise ValueError(f"rng must be 'replay' or 'fast', got {rng!r}")
+        if backend == "numpy" and rng == "fast":
+            raise ValueError(
+                "rng='fast' runs only on the JAX engine; the NumPy backend "
+                "is the replay oracle by definition")
         if backend != "numpy":
             from .engine import FLEngine, as_functional
-            supported = (as_functional(aggregator) is not None
-                         and (self.batch_size is None or self.xs is not None))
+            supported = as_functional(aggregator) is not None
+            if supported and self.xs is None:
+                # unequal sizes: the engine's ragged path needs every device
+                # strictly mini-batched; batch_size >= min |D_m| mixes full-
+                # and mini-batch devices — NumPy-loop semantics only
+                supported = self.batch_size < min(
+                    len(dd) for dd in self.ds.devices)
             if supported:
-                # normalized like FLEngine (batch_size >= |D_m| is full
-                # batch) so the degenerate case still reuses the cache
-                bs = FLEngine.effective_batch_size(self.batch_size,
-                                                   self.xs.shape[1])
+                if self.xs is not None:
+                    # normalized like FLEngine (batch_size >= |D_m| is full
+                    # batch) so the degenerate case still reuses the cache
+                    bs = FLEngine.effective_batch_size(self.batch_size,
+                                                       self.xs.shape[1])
+                else:
+                    bs = self.batch_size
                 if (self._engine is None
                         or self._engine.eta != self.eta
                         or self._engine.project_radius != self.project_radius
@@ -112,13 +135,19 @@ class FLTrainer:
                 return self._engine.run(aggregator, rounds=rounds,
                                         trials=trials, eval_every=eval_every,
                                         seed=seed, w_star=w_star,
-                                        time_budget_s=time_budget_s)
+                                        time_budget_s=time_budget_s,
+                                        rng=rng)
             if backend == "jax":
                 raise ValueError(
                     f"backend='jax' unsupported here: scheme "
                     f"{type(aggregator).__name__} has no JAX port, or "
-                    "mini-batching with unequal-sized device datasets "
-                    "(the engine stacks device data)")
+                    "unequal-sized device datasets with batch_size >= the "
+                    "smallest device (mixed full/mini-batch rounds stay on "
+                    "the NumPy path)")
+        if rng == "fast":
+            raise ValueError(
+                "rng='fast' needs the JAX engine, but this run dispatches "
+                f"to the NumPy path (scheme {type(aggregator).__name__})")
         eval_rounds = list(range(0, rounds + 1, eval_every))
         losses = np.zeros((trials, len(eval_rounds)))
         accs = np.zeros((trials, len(eval_rounds)))
@@ -183,8 +212,16 @@ class FLTrainer:
                         x_b, y_b = d.batch(self.batch_size, indices=ind)
                         bx.append(x_b)
                         by.append(y_b)
-                    grads = self.task.device_grads(w, np.stack(bx),
-                                                   np.stack(by))
+                    if len({b.shape[0] for b in bx}) == 1:
+                        grads = self.task.device_grads(w, np.stack(bx),
+                                                       np.stack(by))
+                    else:
+                        # mixed full/mini regime (batch_size >= some |D_m|):
+                        # batches can't stack, so take per-device gradients
+                        grads = np.stack(
+                            [self.task.device_grads(w, x_b[None],
+                                                    y_b[None])[0]
+                             for x_b, y_b in zip(bx, by)])
                 h = fading.sample(t)
                 # digital schemes consume counter-based dither (one (N, d)
                 # block per round, bit-replayable by the JAX engine); OTA

@@ -326,6 +326,85 @@ class TestTimeBudgetParity:
         assert tr._engine is not None
 
 
+class TestUnequalSizesParity:
+    """Unequal-sized device datasets run natively in the engine: devices
+    are zero-padded to n_max and per-device ragged batch indices — keyed
+    on each device's *own* size — are regenerated in-scan, so the draws
+    are bit-identical to the oracle's per-device ``batch_indices_np``
+    loop and never touch the padding rows. This lifts the last
+    engine-dispatch NumPy fallback for strictly mini-batched runs."""
+
+    UNEQ_BATCH = 16
+
+    @pytest.fixture(scope="class")
+    def unequal(self, setup):
+        from repro.data.loader import DeviceDataset
+
+        task, ds, dep, eta, w_star = setup
+        # sizes 100, 93, ..., 37 — all distinct, all > UNEQ_BATCH
+        devs = [DeviceDataset(d.x[:100 - 7 * m], d.y[:100 - 7 * m])
+                for m, d in enumerate(ds.devices)]
+        ds_u = FLDataset(devs, ds.x_test, ds.y_test)
+        assert len({len(d) for d in ds_u.devices}) == len(ds_u.devices)
+        return task, ds_u, dep, eta, w_star
+
+    @pytest.mark.parametrize("scheme",
+                             ["ideal_fedavg", "vanilla_ota", "uqos"])
+    def test_unequal_parity(self, unequal, scheme):
+        """OTA noise, digital selection+dither, and the noiseless ideal
+        path all agree with the oracle on ragged device data."""
+        task, ds_u, dep, eta, _ = unequal
+        agg = ALL_SCHEME_FACTORIES[scheme](unequal, None, None)
+        tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=self.UNEQ_BATCH)
+        log_np = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="numpy")
+        log_jx = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="jax")
+        _assert_logs_match(log_np, log_jx)
+
+    def test_auto_routes_unequal_through_engine(self, unequal):
+        task, ds_u, dep, eta, _ = unequal
+        tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=self.UNEQ_BATCH)
+        tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2, seed=0)
+        assert tr._engine is not None
+        assert tr._engine.device_sizes == tuple(
+            len(d) for d in ds_u.devices)
+
+    def test_fast_mode_runs_on_ragged_data(self, unequal):
+        """rng='fast' composes with the ragged path (the batch stream is
+        already counter-based, so only fading/noise streams change)."""
+        task, ds_u, dep, eta, _ = unequal
+        agg = B.VanillaOTA(task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                           dep.cfg.noise_power)
+        tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=self.UNEQ_BATCH)
+        log = tr.run(agg, rounds=8, trials=1, eval_every=4, seed=3,
+                     backend="jax", rng="fast")
+        assert np.all(np.isfinite(log.global_loss))
+
+    def test_engine_requires_batch_size_on_unequal(self, unequal):
+        task, ds_u, dep, eta, _ = unequal
+        with pytest.raises(ValueError, match="mini-batch size"):
+            FLEngine(task, ds_u, dep, eta)
+
+    def test_engine_rejects_batch_covering_smallest(self, unequal):
+        task, ds_u, dep, eta, _ = unequal
+        with pytest.raises(ValueError, match="smaller than the smallest"):
+            FLEngine(task, ds_u, dep, eta, batch_size=64)
+
+    def test_mixed_regime_stays_on_numpy(self, unequal):
+        """batch_size >= min |D_m| mixes full- and mini-batch devices —
+        NumPy-loop semantics only: auto falls back, jax refuses."""
+        task, ds_u, dep, eta, _ = unequal
+        tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=50)
+        log = tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
+                     seed=0)
+        assert tr._engine is None
+        assert np.all(np.isfinite(log.global_loss))
+        with pytest.raises(ValueError, match="unequal-sized"):
+            tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
+                   seed=0, backend="jax")
+
+
 class TestGreedyBitAlloc:
     def test_matches_numpy_oracle(self, setup):
         """Jittable greedy allocator == FedTOE._alloc_bits on random

@@ -1,0 +1,144 @@
+"""Parallel sweep executor contracts (``execute(..., jobs=K)``).
+
+The process pool must be *invisible* in the artifacts: a ``jobs=2`` run
+of a sweep produces a manifest and per-cell payloads identical to the
+serial run (modulo wall-clock timings), cached re-runs stay no-ops
+without spawning anything, a half-finished sweep resumes from the cells
+that completed — including when the unfinished half died inside a
+worker — and the dependency-ordered schedule keeps every design-group
+solve ahead of its dependent cells.
+
+(These tests live in a real file on purpose: the pool uses the spawn
+start method, which re-imports ``__main__`` in each worker.)
+"""
+import json
+
+import pytest
+
+from repro.api import ScenarioSpec, SweepSpec, execute, plan
+from repro.api.spec import DataSpec, DesignPolicy, RunSpec
+from repro.core.channel import WirelessConfig
+from repro.fl.trainer import FLTrainer
+
+N_DEVICES = 6
+
+
+def _tiny(**over) -> ScenarioSpec:
+    """Seconds-scale scenario (mirrors test_scenario_api's tiny cell)."""
+    kw = dict(
+        name="tiny_par",
+        data=DataSpec(n_train_per_class=60, n_test_per_class=20,
+                      samples_per_device=60),
+        wireless=WirelessConfig(n_devices=N_DEVICES, seed=1),
+        design=DesignPolicy(kappa=3.0),
+        run=RunSpec(rounds=6, trials=1, eval_every=3, etas=(1.0,),
+                    backend="numpy"),
+        schemes=("proposed_ota", "vanilla_ota"))
+    kw.update(over)
+    return ScenarioSpec(**kw)
+
+
+def _grid() -> SweepSpec:
+    """2x2 grid with a designed scheme: exercises the design-pack path."""
+    return SweepSpec(name="par_grid", base=_tiny(),
+                     axes={"wireless.tx_power_dbm": (-3.0, 3.0),
+                           "design.omega_bias_scale": (1.0, 2.0)})
+
+
+def _strip(obj):
+    """Drop wall-clock fields recursively (the only sanctioned delta)."""
+    if isinstance(obj, dict):
+        return {k: _strip(v) for k, v in obj.items() if k != "elapsed_s"}
+    if isinstance(obj, (list, tuple)):
+        return [_strip(v) for v in obj]
+    return obj
+
+
+def test_parallel_manifest_matches_serial(tmp_path):
+    sweep = _grid()
+    rs_ser = execute(sweep, out_dir=tmp_path / "serial")
+    rs_par = execute(sweep, out_dir=tmp_path / "par", jobs=2)
+    assert [c.status for c in rs_par] == ["computed"] * 4
+    assert _strip(rs_par.manifest) == _strip(rs_ser.manifest)
+    for cs, cp in zip(rs_ser, rs_par):
+        assert cp.cell_hash == cs.cell_hash
+        assert _strip(cp.payload) == _strip(cs.payload)
+    # and so are the artifacts both runs put on disk
+    for cp in rs_par:
+        a = json.loads(cp.path.read_text())
+        b = json.loads((tmp_path / "serial" / "cells"
+                        / f"{cp.cell_hash}.json").read_text())
+        assert _strip(a) == _strip(b)
+
+
+def test_parallel_cached_rerun_is_noop(tmp_path, monkeypatch):
+    sweep = _grid()
+    out = tmp_path / "rs"
+    execute(sweep, out_dir=out, jobs=2)
+
+    def boom(*a, **k):
+        raise AssertionError("cached parallel re-run must not simulate")
+
+    # with every cell cached there is nothing to pool — the stubbed
+    # trainer proves no simulation happens in-process either
+    monkeypatch.setattr(FLTrainer, "run", boom)
+    rs = execute(sweep, out_dir=out, jobs=2)
+    assert rs.all_cached
+
+
+def test_parallel_resumes_partial_sweep(tmp_path):
+    """Serial half-sweep, then the full grid with jobs=2: the finished
+    cells load from cache, only the missing half hits the pool."""
+    base = _tiny()
+    half = SweepSpec(name="par_grid", base=base,
+                     axes={"wireless.tx_power_dbm": (-3.0,),
+                           "design.omega_bias_scale": (1.0, 2.0)})
+    out = tmp_path / "rs"
+    execute(half, out_dir=out)
+    rs = execute(_grid(), out_dir=out, jobs=2)
+    statuses = {c.overrides["wireless.tx_power_dbm"]: c.status for c in rs}
+    assert [c.status for c in rs].count("cached") == 2
+    assert statuses[-3.0] == "cached" and statuses[3.0] == "computed"
+
+
+def test_worker_failure_is_collected_and_resumable(tmp_path):
+    """One cell fails inside a worker (invalid run.rng only trips at run
+    time): execute raises *after* collecting, the good cell's artifact is
+    on disk, and a corrected re-run resumes from it."""
+    base = _tiny(schemes=("vanilla_ota",))
+    bad = SweepSpec(name="par_bad", base=base,
+                    axes={"run.rng": ("replay", "bogus")})
+    out = tmp_path / "rs"
+    with pytest.raises(RuntimeError, match="failed in workers"):
+        execute(bad, out_dir=out, jobs=2)
+    good_hash = plan(SweepSpec(name="par_bad", base=base,
+                               axes={"run.rng": ("replay",)})).cells[0] \
+        .cell_hash
+    assert (out / "cells" / f"{good_hash}.json").exists()
+    rs = execute(SweepSpec(name="par_bad", base=base,
+                           axes={"run.rng": ("replay",)}),
+                 out_dir=out, jobs=2)
+    assert [c.status for c in rs] == ["cached"]
+
+
+def test_jobs_validation(tmp_path):
+    with pytest.raises(ValueError, match="jobs"):
+        execute(_tiny(), out_dir=tmp_path / "rs", jobs=0)
+
+
+def test_schedule_orders_designs_before_dependent_cells():
+    """Every design group appears in the schedule before any cell that
+    needs its parameters — the invariant both executors walk."""
+    pl = plan(_grid())
+    assert pl.design_groups
+    solved = set()
+    seen_cells = set()
+    for kind, item in pl.schedule():
+        if kind == "design":
+            assert not (set(item.cell_indices) & seen_cells), \
+                "design group scheduled after a dependent cell"
+            solved.add(id(item))
+        else:
+            seen_cells.add(item.index)
+    assert len(solved) == len(pl.design_groups)
+    assert len(seen_cells) == len(pl.cells)
