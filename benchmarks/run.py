@@ -37,6 +37,11 @@ def _registry() -> dict:
         "engine_bench_scale": types.SimpleNamespace(
             run=engine_bench.run_scale,
             **{"__doc__": engine_bench.run_scale.__doc__}),
+        # payload-scale fused quantize->pack->aggregate pipeline
+        # (writes the top-level BENCH_kernel_payload.json record)
+        "kernel_bench_payload": types.SimpleNamespace(
+            run=kernel_bench.run_payload,
+            **{"__doc__": kernel_bench.run_payload.__doc__}),
         "design_bench": design_bench,
         "fig2_ota_sc": fig2_ota_sc,
         "fig2_digital_sc": fig2_digital_sc,

@@ -17,6 +17,9 @@
 # the fast-RNG gates (rng="fast" statistical equivalence vs the replay
 # oracle plus the population-scale grid: N=1024 at fig2 dimension under
 # the same 2 GB RSS budget, recorded to BENCH_engine_scale.json),
+# the payload-scale kernel bench (fused quantize->pack->dequant-aggregate
+# vs materialize-then-sum at N=256, d=10^6: must win both wall-clock and
+# peak RSS under the 2 GB budget, recorded to BENCH_kernel_payload.json),
 # and the declarative scenario-sweep smoke: a 2x2 grid through
 # `python -m repro.api.cli run sweep_smoke --jobs 2` (one batched design
 # solve for the grid, cells on a 2-worker spawn pool), asserting the
@@ -58,6 +61,10 @@ echo "== fast-RNG population scale (N=1024 @ fig2 dim; peak-RSS guard) =="
 python -m benchmarks.engine_bench --scale --smoke --rss-budget-mb 2048
 scale_status=$?
 
+echo "== payload kernel bench (fused O(d) aggregation; peak-RSS guard) =="
+python -m benchmarks.kernel_bench --payload --smoke --rss-budget-mb 2048
+payload_status=$?
+
 echo "== scenario sweep smoke (2x2 grid, --jobs 2; manifest + cache no-op) =="
 # fresh 2x2 sweep through the declarative CLI on a 2-worker pool, then
 # assert the manifest landed and a re-run of the finished sweep is a pure
@@ -72,11 +79,12 @@ sweep_status=$?
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
         || [ "$minibatch_status" -ne 0 ] || [ "$design_status" -ne 0 ] \
         || [ "$mem_status" -ne 0 ] || [ "$fastrng_status" -ne 0 ] \
-        || [ "$scale_status" -ne 0 ] || [ "$sweep_status" -ne 0 ]; then
+        || [ "$scale_status" -ne 0 ] || [ "$payload_status" -ne 0 ] \
+        || [ "$sweep_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
          "minibatch=$minibatch_status design=$design_status" \
          "mem=$mem_status fastrng=$fastrng_status scale=$scale_status" \
-         "sweep=$sweep_status)" >&2
+         "payload=$payload_status sweep=$sweep_status)" >&2
     exit 1
 fi
 echo "verify OK"

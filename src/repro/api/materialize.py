@@ -226,7 +226,8 @@ new_memo = _Memo
 
 def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
                  seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1),
-                 backend="auto", batch_size=None, rng="replay"):
+                 backend="auto", batch_size=None, rng="replay",
+                 payload_dtype="f32"):
     """Per-scheme step-size grid search (paper Sec. V: 'step sizes for all
     schemes are tuned via a small grid search'), then the full MC run.
 
@@ -241,7 +242,8 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
         best_eta, best_acc = None, -1.0
         for frac in etas:
             tr = FLTrainer(task, ds, dep, eta=frac * eta_max,
-                           batch_size=batch_size)
+                           batch_size=batch_size,
+                           payload_dtype=payload_dtype)
             probe = tr.run(agg, rounds=rounds, trials=1,
                            eval_every=max(rounds // 4, 1), seed=seed + 91,
                            time_budget_s=time_budget_s, backend=backend,
@@ -249,7 +251,8 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
             acc = float(probe.accuracy[:, -2:].mean())   # 2-pt avg vs MC noise
             if acc > best_acc:
                 best_acc, best_eta = acc, frac * eta_max
-    tr = FLTrainer(task, ds, dep, eta=best_eta, batch_size=batch_size)
+    tr = FLTrainer(task, ds, dep, eta=best_eta, batch_size=batch_size,
+                   payload_dtype=payload_dtype)
     log = tr.run(agg, rounds=rounds, trials=trials, eval_every=eval_every,
                  seed=seed, time_budget_s=time_budget_s, backend=backend,
                  rng=rng)
@@ -264,4 +267,5 @@ def run_cell_scheme(ctx: CellContext, agg):
                         trials=r.trials, eval_every=r.eval_every,
                         seed=r.seed, time_budget_s=r.time_budget_s,
                         etas=tuple(r.etas), backend=r.backend,
-                        batch_size=r.batch_size, rng=r.rng)
+                        batch_size=r.batch_size, rng=r.rng,
+                        payload_dtype=r.payload_dtype)

@@ -31,7 +31,9 @@ import numpy as np
 #: cells from older schema versions are recomputed, not reused.
 #: v3: RunSpec gained ``rng`` (replay|fast execution mode) — spec dicts,
 #: and therefore every content hash, changed layout.
-SCHEMA_VERSION = 3
+#: v4: RunSpec gained ``payload_dtype`` (f32|bf16 uplink payloads) — spec
+#: dicts, and therefore every content hash, changed layout again.
+SCHEMA_VERSION = 4
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_RESULTS_ROOT = Path(os.environ.get(

@@ -12,7 +12,8 @@ A ``SweepSpec`` declares grids over any spec axis by dotted path —
 ``wireless.tx_power_dbm`` (SNR), ``wireless.n_devices``,
 ``wireless.pl_exponent`` (path-loss heterogeneity),
 ``design.omega_bias_scale``, ``run.batch_size``, ``run.time_budget_s``,
-``run.rng`` (replay vs fast execution), ... — and expands to the cross
+``run.rng`` (replay vs fast execution), ``run.payload_dtype`` (f32 vs
+bf16 uplink payloads), ... — and expands to the cross
 product of override-applied scenarios
 (``points()``).
 """
@@ -91,6 +92,7 @@ class RunSpec:
     time_budget_s: Optional[float] = None
     backend: str = "auto"
     rng: str = "replay"                  # "replay" (oracle-exact) | "fast"
+    payload_dtype: str = "f32"           # uplink gradient payload: f32|bf16
 
 
 @dataclasses.dataclass(frozen=True)

@@ -143,9 +143,11 @@ def digital_round_jax(params: DigitalParams, grads, h, u,
     rates = np.maximum(params.rates(), 1e-12)
     lat_m = jnp.asarray(params.payloads() / (params.bandwidth_hz * rates))
     levels = (2.0 ** params.r_bits.astype(np.float64) - 1.0)
-    gq = ops.dithered_quantize_batch(grads, jnp.asarray(levels), u,
-                                     use_kernel=use_kernel)
-    acc = (chi / jnp.asarray(params.nus)) @ gq
+    # static r_max bound lets the payload-scale fused pack path engage at
+    # large d (quantize straight into uint32 codes, O(d) accumulate)
+    acc = ops.quantized_weighted_sum(
+        grads, jnp.asarray(levels), u, chi / jnp.asarray(params.nus),
+        r_max=int(np.max(params.r_bits)), use_kernel=use_kernel)
     latency = jnp.sum(chi * lat_m)
     return acc, chi, latency
 

@@ -184,6 +184,34 @@ def batch_block_ragged(key: jax.Array, t, sizes: tuple,
     return jnp.stack(rows).astype(jnp.int32)
 
 
+def batch_block_mixed(key: jax.Array, t, sizes: tuple,
+                      batch_size: int) -> jnp.ndarray:
+    """(len(sizes), batch_size) int32 batch indices for round ``t`` in the
+    *mixed* full/mini-batch regime (unequal sizes, batch_size >= some
+    ``sizes[m]``).
+
+    Mini-batch rows (``sizes[m] > batch_size``) are the exact
+    :func:`batch_block_ragged` draw — ``fold_in(fold_in(key, t), m)``,
+    bit-identical to the oracle's per-device :func:`batch_indices_np`.
+    Full-batch rows (``sizes[m] <= batch_size``) consume *no* draw,
+    mirroring the oracle's ``indices=None`` full-dataset path: the row is
+    the static gather ``min(arange(batch_size), sizes[m]-1)`` — columns
+    past ``sizes[m]`` duplicate the last sample and carry weight 0 in the
+    engine's weighted-gradient reduction, so they never contribute.
+    ``sizes`` must be static (trace-time Python ints).
+    """
+    kt = jax.random.fold_in(key, t)
+    rows = []
+    for m, n_m in enumerate(sizes):
+        n_m = int(n_m)
+        if n_m > batch_size:
+            rows.append(jax.random.choice(jax.random.fold_in(kt, m), n_m,
+                                          (batch_size,), replace=False))
+        else:
+            rows.append(jnp.minimum(jnp.arange(batch_size), n_m - 1))
+    return jnp.stack(rows).astype(jnp.int32)
+
+
 def _batch_key_np(seed: int, trial: int, _key_cache: dict = {}) -> jax.Array:
     ck = (int(seed), int(trial))
     key = _key_cache.get(ck)

@@ -276,11 +276,16 @@ def _proposed_digital(agg, use_kernel: bool) -> JaxAggregator:
                          needs_noise=False, needs_dither=True)
 
 
-def _quantized_mean(grads, chi, bits, u, k, use_kernel):
-    """sum_{m in sel} dequant(quant(g_m, r_m)) / k and the payload levels."""
+def _quantized_mean(grads, chi, bits, u, k, use_kernel, r_max=None):
+    """sum_{m in sel} dequant(quant(g_m, r_m)) / k and the payload levels.
+
+    ``r_max``: the scheme's static upper bound on any device's bit-width —
+    lets the payload-scale fused pack path (quantize straight into a
+    uint32 code buffer, O(d) dequant-accumulate) kick in at large d.
+    """
     levels = chi * (jnp.exp2(bits) - 1.0)
-    gq = ops.dithered_quantize_batch(grads, levels, u, use_kernel=use_kernel)
-    return (chi / k) @ gq
+    return ops.quantized_weighted_sum(grads, levels, u, chi / k,
+                                      r_max=r_max, use_kernel=use_kernel)
 
 
 @register_port(B.BestChannel)
@@ -294,7 +299,8 @@ def _best_channel(agg: "B.BestChannel", use_kernel: bool) -> JaxAggregator:
         chi = topk_mask(habs, k).astype(grads.dtype)
         rate = capacity_rate_jnp(habs, e_s, n0)
         lat = jnp.sum(chi * payload / (bw * jnp.maximum(rate, 1e-9)))
-        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel)
+        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel,
+                              r_max=r)
         return acc, lat
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
@@ -320,7 +326,8 @@ def _best_channel_norm(agg: "B.BestChannelNorm",
         rate = capacity_rate_jnp(habs, e_s, n0)
         lat = jnp.sum(chi * (64.0 + dim * bits)
                       / (bw * jnp.maximum(rate, 1e-9)))
-        acc = _quantized_mean(grads, chi, bits, u, k, use_kernel)
+        acc = _quantized_mean(grads, chi, bits, u, k, use_kernel,
+                              r_max=r_total)
         return acc, lat
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
@@ -339,7 +346,8 @@ def _prop_fairness(agg: "B.PropFairness", use_kernel: bool) -> JaxAggregator:
         chi = topk_mask(habs ** 2 / lambdas, k).astype(grads.dtype)
         rate = capacity_rate_jnp(habs, e_s, n0)
         lat = jnp.sum(chi * payload / (bw * jnp.maximum(rate, 1e-9)))
-        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel)
+        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel,
+                              r_max=r)
         return acc, lat
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
@@ -378,9 +386,9 @@ def _uqos(agg: "B.UQOS", use_kernel: bool) -> JaxAggregator:
         snr_ok = capacity_rate_jnp(habs, e_s, n0) >= rate_c
         active = cmask * snr_ok
         levels = active * (2.0 ** r - 1.0)
-        gq = ops.dithered_quantize_batch(grads, levels, u,
-                                         use_kernel=use_kernel)
-        acc = (active / (n * pi * p_succ)) @ gq    # unbiased reweight
+        acc = ops.quantized_weighted_sum(            # unbiased reweight
+            grads, levels, u, active / (n * pi * p_succ),
+            r_max=r, use_kernel=use_kernel)
         lat = jnp.sum(active) * payload / (bw * rate_c)
         return acc, lat
 
@@ -414,7 +422,8 @@ def _qml(agg: "B.QML", use_kernel: bool) -> JaxAggregator:
         chi = jnp.zeros(n, grads.dtype).at[sel.astype(jnp.int32)].set(1.0)
         rate = capacity_rate_jnp(jnp.abs(h), e_s, n0)
         lat = jnp.sum(chi * payload / (bw * jnp.maximum(rate, 1e-9)))
-        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel)
+        acc = _quantized_mean(grads, chi, chi * r, u, k, use_kernel,
+                              r_max=r)
         return acc, lat
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
@@ -448,7 +457,8 @@ def _fedtoe(agg: "B.FedTOE", use_kernel: bool) -> JaxAggregator:
         chi = (in_alloc * (jnp.abs(h) >= thr)).astype(grads.dtype)  # no outage
         k_sched = jnp.maximum(jnp.sum(in_alloc), 1.0)
         acc = _quantized_mean(grads, chi, chi * bits, u,
-                              k_sched * (1.0 - p_out), use_kernel)
+                              k_sched * (1.0 - p_out), use_kernel,
+                              r_max=r_max)
         return acc, lat
 
     return JaxAggregator(name=agg.name, is_ota=False, round_fn=round_fn,
@@ -501,7 +511,11 @@ class FLEngine:
     def __init__(self, task, dataset, deployment: Deployment, eta: float, *,
                  project_radius: Optional[float] = None,
                  batch_size: Optional[int] = None,
-                 use_kernel: bool = True, shard_trials: bool = False):
+                 use_kernel: bool = True, shard_trials: bool = False,
+                 payload_dtype: str = "f32"):
+        if payload_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
         self.task = task
         self.ds = dataset
         self.dep = deployment
@@ -509,6 +523,7 @@ class FLEngine:
         self.project_radius = project_radius
         self.use_kernel = use_kernel
         self.shard_trials = shard_trials
+        self.payload_dtype = payload_dtype
         sizes = tuple(len(d) for d in dataset.devices)
         if len(set(sizes)) == 1:
             self.device_sizes = None      # equal sizes: plain stacked arrays
@@ -519,20 +534,18 @@ class FLEngine:
                 [d.y for d in dataset.devices]).astype(np.int32)
         else:
             # unequal sizes: zero-pad each device to n_max and regenerate
-            # per-device ragged batch indices in-scan (batch_block_ragged
-            # keys each row on that device's own size, so draws match the
-            # oracle's per-device batch_indices_np exactly and never touch
-            # the padding rows)
+            # per-device batch indices in-scan. Strictly mini-batch rounds
+            # (batch_size < every size) use batch_block_ragged, whose
+            # per-device keyed draws match the oracle's batch_indices_np
+            # exactly and never touch the padding rows; the mixed
+            # full/mini-batch regime (batch_size >= some device's size)
+            # runs those devices full-batch through the weighted gradient
+            # path (see _get_runner).
             if batch_size is None:
                 raise ValueError(
                     "FLEngine needs a mini-batch size when device datasets "
                     f"have unequal sizes (got sizes {sorted(set(sizes))}); "
                     "use backend='numpy' for full-batch unequal runs")
-            if batch_size >= min(sizes):
-                raise ValueError(
-                    f"batch_size ({batch_size}) must be smaller than the "
-                    f"smallest device dataset ({min(sizes)}) when device "
-                    "sizes are unequal")
             self.device_sizes = sizes
             self.batch_size = batch_size
             n_max = max(sizes)
@@ -580,15 +593,37 @@ class FLEngine:
         # arguments
         key = (self.task, trials, n_seg, eval_every, d, N,
                self.xs.shape, self.batch_size, self.device_sizes,
-               self.use_kernel, self.shard_trials, rng_mode)
+               self.use_kernel, self.shard_trials, rng_mode,
+               self.payload_dtype)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
         batch_size = self.batch_size
         device_sizes = self.device_sizes
         n_data = self.xs.shape[1]
-        grads_fn = (self.task.device_grads_fn if batch_size is None
-                    else self.task.device_grads_at_fn)
+        # mixed full/mini-batch regime: unequal device sizes with the batch
+        # covering some devices. Covered devices run full-batch; the batch
+        # block still has batch_size columns (gather rows are clipped), so
+        # per-row *weights* carry each device's true normalization — full
+        # rows weight their n_m real rows by 1/n_m (clipped duplicates get
+        # 0), mini rows weight by 1/batch_size — through the task's
+        # weighted gradient path.
+        mixed = (device_sizes is not None
+                 and batch_size >= min(device_sizes))
+        if batch_size is None:
+            grads_fn = self.task.device_grads_fn
+        elif mixed:
+            grads_fn = self.task.device_grads_at_weighted_fn
+            wts = np.zeros((N, batch_size), np.float32)
+            for m, n_m in enumerate(device_sizes):
+                if n_m <= batch_size:
+                    wts[m, :n_m] = 1.0 / n_m
+                else:
+                    wts[m, :] = 1.0 / batch_size
+            batch_wts = jnp.asarray(wts)
+        else:
+            grads_fn = self.task.device_grads_at_fn
+        payload_bf16 = self.payload_dtype == "bf16"
         round_fn = jagg.round_fn
         needs_dither = jagg.needs_dither
         needs_noise = jagg.needs_noise
@@ -631,14 +666,26 @@ class FLEngine:
                     # bit-identical to the oracle's batch_block_np /
                     # batch_indices_np draws (ragged rows key on each
                     # device's own size and never hit the padding)
-                    if device_sizes is not None:
+                    if mixed:
+                        idx = rngstream.batch_block_mixed(
+                            bkey, t, device_sizes, batch_size)
+                        g = grads_fn(w.astype(jnp.float32), xs, ys, idx,
+                                     batch_wts).astype(jnp.float64)
+                    elif device_sizes is not None:
                         idx = rngstream.batch_block_ragged(
                             bkey, t, device_sizes, batch_size)
+                        g = grads_fn(w.astype(jnp.float32), xs, ys, idx
+                                     ).astype(jnp.float64)
                     else:
                         idx = rngstream.batch_block(bkey, t, N, n_data,
                                                     batch_size)
-                    g = grads_fn(w.astype(jnp.float32), xs, ys, idx
-                                 ).astype(jnp.float64)
+                        g = grads_fn(w.astype(jnp.float32), xs, ys, idx
+                                     ).astype(jnp.float64)
+                if payload_bf16:
+                    # mixed-precision uplink: the gradient payload leaves
+                    # the device truncated to bf16; aggregation stays in
+                    # the engine's wide accumulators
+                    g = g.astype(jnp.bfloat16).astype(jnp.float64)
                 if needs_dither:
                     # one (N, d) block regenerated per round — the whole
                     # dither stream never exists in memory at once

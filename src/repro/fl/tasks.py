@@ -45,6 +45,17 @@ def _device_grad_at(device_grad):
     return grad_at
 
 
+def _device_grad_at_weighted(device_grad_w):
+    """Weighted-gather view for the *mixed* full/mini-batch regime: gather
+    ``batch_size`` rows by index, then a clipped gradient of the
+    *weighted-sum* loss. With weights 1/n_m on a full device's n_m real
+    rows (0 on the clipped duplicates) or 1/B on a mini device's B drawn
+    rows, this equals the mean-loss gradient up to fp summation order."""
+    def grad_at(w_flat, x, y, idx, wt):
+        return device_grad_w(w_flat, x[idx], y[idx], wt)
+    return grad_at
+
+
 class SoftmaxRegressionTask:
     """phi(w,(x,l)) = mu/2 ||w||^2 - log softmax_l(x^T W); strongly convex."""
 
@@ -74,6 +85,22 @@ class SoftmaxRegressionTask:
         self._device_losses = jax.jit(jax.vmap(loss, in_axes=(None, 0, 0)))
         self._device_grads_at = jax.jit(
             jax.vmap(_device_grad_at(device_grad), in_axes=(None, 0, 0, 0)))
+
+        def loss_w(w_flat, x, y, wt):
+            W = w_flat.reshape(n_classes, n_features + 1)
+            logits = x @ W[:, :-1].T + W[:, -1]
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -(wt * logp[jnp.arange(x.shape[0]), y]).sum()
+            return nll + 0.5 * mu * jnp.sum(w_flat ** 2)
+
+        grad1_w = jax.grad(loss_w)
+
+        def device_grad_w(w_flat, x, y, wt):
+            return _clip_to(grad1_w(w_flat, x, y, wt), g_max)
+
+        self._device_grads_at_w = jax.jit(
+            jax.vmap(_device_grad_at_weighted(device_grad_w),
+                     in_axes=(None, 0, 0, 0, 0)))
 
         def acc(w_flat, x, y):
             W = w_flat.reshape(n_classes, n_features + 1)
@@ -105,6 +132,14 @@ class SoftmaxRegressionTask:
         """Jitted mini-batch gradient (w32, xs (N,n,f), ys, idx (N,B)) ->
         (N,d): gathers each device's batch by index, then the clipped grad."""
         return self._device_grads_at
+
+    @property
+    def device_grads_at_weighted_fn(self):
+        """Jitted weighted mini-batch gradient for the mixed full/mini
+        regime: (w32, xs, ys, idx (N,B), wt (N,B)) -> (N,d). Per-row
+        weights replace the mean so full devices (weight 1/n_m on real
+        rows, 0 on duplicates) and mini devices (1/B) share one program."""
+        return self._device_grads_at_w
 
     def device_grads(self, w, xs, ys):
         """xs: (N, n, feat), ys: (N, n) stacked device batches."""
@@ -175,6 +210,23 @@ class MLPTask:
         self._device_grads_at = jax.jit(
             jax.vmap(_device_grad_at(device_grad), in_axes=(None, 0, 0, 0)))
 
+        def loss_w(w_flat, x, y, wt):
+            W1, b1, W2, b2 = unpack(w_flat)
+            hdn = jax.nn.relu(x @ W1 + b1)
+            logits = hdn @ W2 + b2
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -(wt * logp[jnp.arange(x.shape[0]), y]).sum()
+            return nll + 0.5 * mu_nc * jnp.sum(w_flat ** 2)
+
+        grad1_w = jax.grad(loss_w)
+
+        def device_grad_w(w_flat, x, y, wt):
+            return _clip_to(grad1_w(w_flat, x, y, wt), g_max)
+
+        self._device_grads_at_w = jax.jit(
+            jax.vmap(_device_grad_at_weighted(device_grad_w),
+                     in_axes=(None, 0, 0, 0, 0)))
+
         def acc(w_flat, x, y):
             W1, b1, W2, b2 = unpack(w_flat)
             logits = jax.nn.relu(x @ W1 + b1) @ W2 + b2
@@ -216,6 +268,14 @@ class MLPTask:
         (N,d): gathers each device's batch by index, then the clipped grad."""
         return self._device_grads_at
 
+    @property
+    def device_grads_at_weighted_fn(self):
+        """Jitted weighted mini-batch gradient for the mixed full/mini
+        regime: (w32, xs, ys, idx (N,B), wt (N,B)) -> (N,d). Per-row
+        weights replace the mean so full devices (weight 1/n_m on real
+        rows, 0 on duplicates) and mini devices (1/B) share one program."""
+        return self._device_grads_at_w
+
     def device_grads(self, w, xs, ys):
         g = self._device_grads(jnp.asarray(w, jnp.float32),
                                jnp.asarray(xs), jnp.asarray(ys))
@@ -235,3 +295,80 @@ class MLPTask:
     def accuracy(self, w, x, y) -> float:
         return float(self._acc(jnp.asarray(w, jnp.float32),
                                jnp.asarray(x), jnp.asarray(y)))
+
+
+class SyntheticHighDimTask:
+    """Payload-scale synthetic task: f_m(w) = 1/2 ||w - c_m||^2 per device.
+
+    Built for the large-d kernel harness (d up to 10^7): gradients are
+    O(d) closed-form (``clip(w - c_m)``), so the bench can stream per-device
+    gradient chunks without holding a dataset of comparable size. The
+    device "data" is just its integer id — ``device_data`` returns
+    (N, 1, 1) xs carrying the id and dummy (N, 1) ys — and each center
+    c_m is a counter-based threefry normal keyed on (seed, m), generated
+    on demand inside the jit. Exposes the same ``device_grads_fn`` /
+    ``device_grads_at_fn`` protocol as the learning tasks so it can drive
+    the engine or the bench interchangeably.
+    """
+
+    def __init__(self, dim: int, g_max: float = 1e9, seed: int = 0):
+        self.dim = dim
+        self.g_max = g_max
+        self._seed = seed
+        base = jax.random.PRNGKey(seed)
+
+        def center(dev_id):
+            return jax.random.normal(jax.random.fold_in(base, dev_id),
+                                     (dim,), dtype=jnp.float32)
+
+        def loss(w_flat, x, y):
+            c = center(x[0, 0].astype(jnp.int32))
+            return 0.5 * jnp.sum((w_flat - c) ** 2)
+
+        def device_grad(w_flat, x, y):
+            c = center(x[0, 0].astype(jnp.int32))
+            return _clip_to(w_flat - c, g_max)
+
+        self._loss = jax.jit(loss)
+        self._device_grads = jax.jit(jax.vmap(device_grad,
+                                              in_axes=(None, 0, 0)))
+        self._device_grads_at = jax.jit(
+            jax.vmap(_device_grad_at(device_grad), in_axes=(None, 0, 0, 0)))
+        self._acc = jax.jit(lambda w_flat, x, y: jnp.float32(0.0))
+
+    def init_params(self, seed: int = 0) -> np.ndarray:
+        return np.zeros(self.dim, dtype=np.float64)
+
+    def device_data(self, n_devices: int):
+        """(xs, ys) stand-in dataset: xs[m] = [[m]] (the id), ys dummy."""
+        xs = np.arange(n_devices, dtype=np.float32).reshape(n_devices, 1, 1)
+        ys = np.zeros((n_devices, 1), dtype=np.int32)
+        return xs, ys
+
+    @property
+    def loss_fn(self):
+        return self._loss
+
+    @property
+    def accuracy_fn(self):
+        return self._acc
+
+    @property
+    def device_grads_fn(self):
+        return self._device_grads
+
+    @property
+    def device_grads_at_fn(self):
+        return self._device_grads_at
+
+    def device_grads(self, w, xs, ys):
+        g = self._device_grads(jnp.asarray(w, jnp.float32),
+                               jnp.asarray(xs), jnp.asarray(ys))
+        return np.asarray(g, dtype=np.float64)
+
+    def global_loss(self, w, x, y) -> float:
+        return float(self._loss(jnp.asarray(w, jnp.float32),
+                                jnp.asarray(x), jnp.asarray(y)))
+
+    def accuracy(self, w, x, y) -> float:
+        return 0.0

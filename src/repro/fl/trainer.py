@@ -43,13 +43,18 @@ class TrainLog:
 class FLTrainer:
     def __init__(self, task, dataset, deployment: Deployment,
                  eta: float, *, project_radius: Optional[float] = None,
-                 batch_size: Optional[int] = None):
+                 batch_size: Optional[int] = None,
+                 payload_dtype: str = "f32"):
+        if payload_dtype not in ("f32", "bf16"):
+            raise ValueError(
+                f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
         self.task = task
         self.ds = dataset
         self.dep = deployment
         self.eta = eta
         self.project_radius = project_radius
         self.batch_size = batch_size
+        self.payload_dtype = payload_dtype
         self._engine = None
         # stack device data once whenever sizes allow: (N, n, feat). The
         # stacked view serves the full-batch path AND the counter-based
@@ -85,11 +90,15 @@ class FLTrainer:
         port; "auto" (default) — the engine whenever the scheme is
         registered in its port routing table (all 14 paper baselines are),
         NumPy otherwise. Mini-batching, time budgets and unequal-sized
-        device datasets run natively in the engine: batch indices are
-        counter-based (``core.rngstream``, ragged per-device rows when
-        sizes differ) and the budget-freeze mask is evaluated in-scan, so
-        both backends replay the same random streams and trajectories agree
-        to ~1e-5 (tests/test_engine_parity.py).
+        device datasets run natively in the engine — including the mixed
+        full/mini-batch regime (batch_size >= some |D_m|), where full
+        devices take weighted full-data gradients and mini devices the
+        counter-based draw: batch indices are counter-based
+        (``core.rngstream``, ragged per-device rows when sizes differ) and
+        the budget-freeze mask is evaluated in-scan, so both backends
+        replay the same random streams and trajectories agree to ~1e-5
+        (tests/test_engine_parity.py; mixed rounds to ~1e-4 — the weighted
+        sum reorders the oracle's mean reduction).
 
         rng: "replay" (default) — byte-compatible with the NumPy oracle's
         sequential streams (fading/AWGN/selection precomputed per trial);
@@ -107,15 +116,14 @@ class FLTrainer:
             raise ValueError(
                 "rng='fast' runs only on the JAX engine; the NumPy backend "
                 "is the replay oracle by definition")
+        if backend == "numpy" and self.payload_dtype != "f32":
+            raise ValueError(
+                "payload_dtype='bf16' runs only on the JAX engine (the "
+                "mixed-precision uplink cast lives in its scan); the NumPy "
+                "backend is the f32/f64 replay oracle by definition")
         if backend != "numpy":
             from .engine import FLEngine, as_functional
             supported = as_functional(aggregator) is not None
-            if supported and self.xs is None:
-                # unequal sizes: the engine's ragged path needs every device
-                # strictly mini-batched; batch_size >= min |D_m| mixes full-
-                # and mini-batch devices — NumPy-loop semantics only
-                supported = self.batch_size < min(
-                    len(dd) for dd in self.ds.devices)
             if supported:
                 if self.xs is not None:
                     # normalized like FLEngine (batch_size >= |D_m| is full
@@ -127,11 +135,12 @@ class FLTrainer:
                 if (self._engine is None
                         or self._engine.eta != self.eta
                         or self._engine.project_radius != self.project_radius
-                        or self._engine.batch_size != bs):
+                        or self._engine.batch_size != bs
+                        or self._engine.payload_dtype != self.payload_dtype):
                     self._engine = FLEngine(
                         self.task, self.ds, self.dep, self.eta,
                         project_radius=self.project_radius,
-                        batch_size=bs)
+                        batch_size=bs, payload_dtype=self.payload_dtype)
                 return self._engine.run(aggregator, rounds=rounds,
                                         trials=trials, eval_every=eval_every,
                                         seed=seed, w_star=w_star,
@@ -140,14 +149,16 @@ class FLTrainer:
             if backend == "jax":
                 raise ValueError(
                     f"backend='jax' unsupported here: scheme "
-                    f"{type(aggregator).__name__} has no JAX port, or "
-                    "unequal-sized device datasets with batch_size >= the "
-                    "smallest device (mixed full/mini-batch rounds stay on "
-                    "the NumPy path)")
+                    f"{type(aggregator).__name__} has no JAX port")
         if rng == "fast":
             raise ValueError(
                 "rng='fast' needs the JAX engine, but this run dispatches "
                 f"to the NumPy path (scheme {type(aggregator).__name__})")
+        if self.payload_dtype != "f32":
+            raise ValueError(
+                "payload_dtype='bf16' needs the JAX engine, but this run "
+                "dispatches to the NumPy path (scheme "
+                f"{type(aggregator).__name__})")
         eval_rounds = list(range(0, rounds + 1, eval_every))
         losses = np.zeros((trials, len(eval_rounds)))
         accs = np.zeros((trials, len(eval_rounds)))

@@ -1,0 +1,109 @@
+"""Measured block-rows autotuner for the Pallas kernel tier.
+
+Every kernel wrapper used to hard-code ``BLOCK_ROWS = 512``. For toy
+payloads (fig2's d=7,850 → 62 rows) the tile is clamped to the payload
+anyway, but at payload scale (d=10^5–10^7 → thousands of rows) the tile
+is a real knob: it trades grid-step overhead (small tiles) against
+VMEM/working-set pressure (large tiles), and the right choice depends on
+dtype width and on whether the kernel runs interpret-on-CPU or
+Mosaic-on-TPU.
+
+``choose_block_rows(kind, rows, dtype, bench=...)`` picks the tile:
+
+  * ``rows`` below the legacy default → the deterministic power-of-two
+    clamp the wrappers always used (``_pow2_fit``); nothing to measure,
+    nothing changes for small payloads.
+  * otherwise → time each candidate tile once on a small synthetic slab
+    via the caller-supplied ``bench(block_rows) -> fn()`` factory and
+    cache the winner under ``(kind, rows, dtype, backend)``.
+
+The measurement is interpret-mode safe: ``bench`` closes over concrete
+(non-traced) arrays, so the jitted kernel calls dispatch eagerly even
+when the chooser runs while an outer ``jit`` is tracing (shapes/dtypes
+are static there, which is all the cache key needs).
+
+``REPRO_AUTOTUNE=0`` pins the legacy 512 everywhere measurement would
+have run — a determinism escape hatch for debugging. ``measure_count``
+counts actual measurement sweeps (the cache-determinism test hook).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+DEFAULT_BLOCK_ROWS = 512
+# 8192 x 128 x f32 = 4 MB — about half a TPU core's VMEM, the practical
+# tile ceiling; in interpret-on-CPU the per-grid-step cost is nearly
+# size-independent, so the chooser measures its way to the big end.
+CANDIDATES = (256, 512, 1024, 2048, 4096, 8192)
+# Rows in the synthetic measurement slab: divisible by every candidate,
+# small enough (8192 x 128 x 8B = 8 MB) that tuning stays cheap.
+MEASURE_ROWS = 8192
+_REPS = 2
+
+_cache: dict = {}
+measure_count = 0  # total measurement sweeps run (test hook)
+
+
+def clear_cache() -> None:
+    _cache.clear()
+
+
+def _pow2_fit(rows: int) -> int:
+    """Legacy clamp: smallest power of two >= rows, floored at 8."""
+    br = 8
+    while br < rows:
+        br *= 2
+    return br
+
+
+def _enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def _measure(bench, block_rows: int) -> float:
+    fn = bench(block_rows)
+    jax.block_until_ready(fn())  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(_REPS):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / _REPS
+
+
+def choose_block_rows(kind: str, rows: int, dtype, bench=None) -> int:
+    """Pick a block_rows tile for a kernel of the given kind.
+
+    kind   -- kernel family ("quantize", "ota", "reduce", "pack",
+              "unpack", ...); part of the cache key only.
+    rows   -- total (LANES-wide) rows the kernel will process.
+    dtype  -- element dtype of the payload operand.
+    bench  -- callable ``bench(block_rows) -> fn`` where ``fn()`` runs
+              the kernel once on a measurement slab and returns its
+              output (the chooser block_until_ready's it). ``None``
+              disables measurement (legacy default tile).
+    """
+    if rows < DEFAULT_BLOCK_ROWS:
+        return _pow2_fit(rows)
+    if bench is None or not _enabled():
+        return DEFAULT_BLOCK_ROWS
+    dtype = jax.dtypes.canonicalize_dtype(dtype)
+    key = (kind, int(rows), str(dtype), jax.default_backend())
+    hit = _cache.get(key)
+    if hit is not None:
+        return hit
+    global measure_count
+    measure_count += 1
+    # never hand out a tile more than one pow2 above the payload's own row
+    # count — the wrapper would pad the whole shortfall as dead work
+    cap = _pow2_fit(rows)
+    best, best_t = DEFAULT_BLOCK_ROWS, float("inf")
+    for br in CANDIDATES:
+        if br > cap:
+            continue
+        t = _measure(bench, br)
+        if t < best_t:
+            best, best_t = br, t
+    _cache[key] = best
+    return best

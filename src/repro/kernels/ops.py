@@ -6,15 +6,24 @@ Mosaic. All wrappers accept arbitrary-shaped operands.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .dithered_quant import (dithered_quantize_2d, dithered_quantize_rows_2d,
                              BLOCK_ROWS, LANES)
 from .ota_combine import ota_combine_2d
 from .linear_scan import linear_scan_fsl, CHUNK
 from .row_reduce import row_maxabs_sumsq_2d
+from .payload import (quantize_pack_rows_2d, unpack_dequant_rows_2d,
+                      packed_weighted_sum_2d, CODE_BITS_CHOICES)
+
+# Below this payload dimension the fused pack path is not worth the extra
+# kernel: the two-step quantize + matvec fits one or two tiles anyway and
+# stays the bit-compared parity path for the paper-scale figures.
+FUSED_MIN_DIM = 1 << 17
 
 
 def _on_cpu() -> bool:
@@ -29,10 +38,52 @@ def _fit_block_rows(n: int) -> int:
     rows = -(-n // LANES)
     if rows >= BLOCK_ROWS:
         return BLOCK_ROWS
-    br = 8
-    while br < rows:
-        br *= 2
-    return br
+    return autotune._pow2_fit(rows)
+
+
+def _autotune_bench(kind: str, dtype):
+    """bench(block_rows) factory for the measured tile chooser: each kernel
+    family timed on a fixed (MEASURE_ROWS, LANES) zero slab."""
+    dtype = jax.dtypes.canonicalize_dtype(dtype)
+    rows = autotune.MEASURE_ROWS
+    interp = _on_cpu()
+
+    def bench(block_rows):
+        z = jnp.zeros((rows, LANES), dtype)
+        one = jnp.ones((), dtype)
+        if kind == "quantize":
+            scal = jnp.ones((1, 2), dtype)
+            return lambda: dithered_quantize_rows_2d(
+                z, z, scal, interpret=interp, block_rows=block_rows)
+        if kind == "ota":
+            return lambda: ota_combine_2d(
+                z, z, one, interpret=interp, block_rows=block_rows)
+        if kind == "reduce":
+            return lambda: row_maxabs_sumsq_2d(
+                z, n_dev=1, interpret=interp, block_rows=block_rows)
+        if kind == "pack":
+            scal = jnp.ones((1, 2), dtype)
+            return lambda: quantize_pack_rows_2d(
+                z, z, scal, code_bits=8, interpret=interp,
+                block_rows=block_rows)
+        if kind == "unpack":
+            p = jnp.zeros((rows // 4, LANES), jnp.uint32)
+            scal = jnp.ones((1, 3), dtype)
+            return lambda: packed_weighted_sum_2d(
+                p, scal, code_bits=8, n_dev=1, interpret=interp,
+                block_rows=block_rows)
+        raise ValueError(f"unknown autotune kind: {kind}")
+
+    return bench
+
+
+def _tuned_block_rows(kind: str, n: int, dtype) -> int:
+    """Measured replacement for the fixed BLOCK_ROWS: small payloads keep
+    the deterministic power-of-two clamp, large ones get the cached
+    autotuned tile for (kind, rows, dtype, backend)."""
+    rows = -(-n // LANES)
+    return autotune.choose_block_rows(kind, rows, dtype,
+                                      bench=_autotune_bench(kind, dtype))
 
 
 def _to_blocks(x: jnp.ndarray, block_rows: int = BLOCK_ROWS):
@@ -56,7 +107,7 @@ def dithered_quantize(g: jnp.ndarray, levels: jnp.ndarray, key: jax.Array,
     levels = jnp.asarray(levels, g.dtype)
     if not use_kernel:
         return ref.dithered_quantize_ref(g, m, levels, dither)
-    br = _fit_block_rows(g.size)
+    br = _tuned_block_rows("quantize", g.size, g.dtype)
     g2d, n = _to_blocks(g, br)
     u2d, _ = _to_blocks(dither, br)
     out = dithered_quantize_2d(g2d, u2d, m, levels, interpret=_on_cpu(),
@@ -77,7 +128,7 @@ def dithered_quantize_with_dither(g: jnp.ndarray, levels: jnp.ndarray,
     dither = dither.astype(g.dtype)
     if not use_kernel:
         return ref.dithered_quantize_ref(g, m, levels, dither)
-    br = _fit_block_rows(g.size)
+    br = _tuned_block_rows("quantize", g.size, g.dtype)
     g2d, n = _to_blocks(g, br)
     u2d, _ = _to_blocks(dither, br)
     out = dithered_quantize_2d(g2d, u2d, m, levels, interpret=_on_cpu(),
@@ -100,7 +151,7 @@ def dithered_quantize_batch(gs: jnp.ndarray, levels: jnp.ndarray,
     if not use_kernel:
         return jax.vmap(ref.dithered_quantize_ref)(gs, m, levels, dither)
     n_dev, d = gs.shape
-    br = _fit_block_rows(d)
+    br = _tuned_block_rows("quantize", d, gs.dtype)
     per = br * LANES
     d_pad = (-d) % per
     pad = lambda x: jnp.pad(x, ((0, 0), (0, d_pad))).reshape(-1, LANES)
@@ -110,45 +161,194 @@ def dithered_quantize_batch(gs: jnp.ndarray, levels: jnp.ndarray,
     return out.reshape(n_dev, d + d_pad)[:, :d]
 
 
-def row_maxabs_sumsq(gs: jnp.ndarray, *, use_kernel: bool = True):
+def code_bits_for(r_max) -> int | None:
+    """Smallest packable code width covering r_max-bit quantizers.
+
+    Codes are integers in [0, 2^r - 1]; supported packed widths are
+    CODE_BITS_CHOICES = (4, 8, 16). 16 is the ceiling on purpose: wider
+    codes would not survive the f32 round-trip exactly (f32 represents
+    integers only up to 2^24) and r > 16 bits/entry has no compression
+    story anyway. Returns None when no fused path applies.
+    """
+    if r_max is None:
+        return None
+    r = int(r_max)
+    for cb in CODE_BITS_CHOICES:
+        if r <= cb:
+            return cb
+    return None
+
+
+@dataclasses.dataclass
+class PackedGrads:
+    """Bit-packed device payload buffer (the digital uplink wire format).
+
+    words holds each device's quantizer codes at ``code_bits`` per entry,
+    K = 32/code_bits codes per uint32 — code_bits/32 the bytes of the
+    float block it replaces. scal: (N, 2) per-device (||g||_inf, levels).
+    """
+    words: jnp.ndarray        # (N * R_dev / K, LANES) uint32
+    scal: jnp.ndarray         # (N, 2)
+    code_bits: int
+    n_dev: int
+    d: int
+    block_rows: int
+
+
+def quantize_pack(gs: jnp.ndarray, levels: jnp.ndarray, dither: jnp.ndarray,
+                  *, code_bits: int) -> PackedGrads:
+    """Fused dither -> quantize -> bit-pack of N device gradients.
+
+    gs/dither: (N, d); levels: (N,) per-device 2^{r_m} - 1 with
+    r_m <= code_bits. One Pallas pass per device block; the dequantized
+    float tensor is never formed.
+    """
+    n_dev, d = gs.shape
+    m = jnp.max(jnp.abs(gs), axis=1).astype(gs.dtype)
+    levels = jnp.asarray(levels, gs.dtype)
+    dither = dither.astype(gs.dtype)
+    br = _tuned_block_rows("pack", d, gs.dtype)
+    per = br * LANES
+    d_pad = (-d) % per
+    pad = lambda x: jnp.pad(x, ((0, 0), (0, d_pad))).reshape(-1, LANES)
+    scal = jnp.stack([m, levels], axis=1)
+    words = quantize_pack_rows_2d(pad(gs), pad(dither), scal,
+                                  code_bits=code_bits,
+                                  interpret=_on_cpu(), block_rows=br)
+    return PackedGrads(words, scal, code_bits, n_dev, d, br)
+
+
+def unpack_dequant(pk: PackedGrads) -> jnp.ndarray:
+    """Decode a packed payload buffer back to (N, d) dequantized floats.
+
+    The materializing decoder — bit-exact inverse of the two-step
+    ``dithered_quantize_batch`` output, and the O(N*d) baseline the fused
+    ``packed_weighted_sum`` is benchmarked against.
+    """
+    out = unpack_dequant_rows_2d(pk.words, pk.scal, code_bits=pk.code_bits,
+                                 n_dev=pk.n_dev, interpret=_on_cpu(),
+                                 block_rows=pk.block_rows)
+    return out.reshape(pk.n_dev, -1)[:, :pk.d]
+
+
+def _dev_block(n_dev: int) -> int:
+    """Devices per grid step for the fused accumulate. On CPU/interpret
+    the per-grid-step overhead dominates (every step copies the operand
+    buffers), so group as many whole payloads per step as divide N; on
+    TPU a multi-payload block would blow VMEM, so keep the tiled launch."""
+    if not _on_cpu():
+        return 1
+    for db in (16, 8, 4, 2):
+        if n_dev % db == 0:
+            return db
+    return 1
+
+
+def packed_weighted_sum(pk: PackedGrads, weights: jnp.ndarray) -> jnp.ndarray:
+    """sum_i w_i * dequant(payload_i) with an O(d) accumulator.
+
+    Unpacks, dequantizes and accumulates per block with the device axis
+    innermost — device-index order, the NumPy oracle's (and
+    ``ref.quantized_weighted_sum_ref``'s) sequential association, agreeing
+    to the last ulp (FMA contraction) — without materializing the (N, d)
+    dequantized tensor.
+    """
+    w = jnp.asarray(weights, pk.scal.dtype).reshape(-1, 1)
+    scal3 = jnp.concatenate([pk.scal, w], axis=1)
+    out = packed_weighted_sum_2d(pk.words, scal3, code_bits=pk.code_bits,
+                                 n_dev=pk.n_dev, interpret=_on_cpu(),
+                                 block_rows=pk.block_rows,
+                                 dev_block=_dev_block(pk.n_dev))
+    return out.reshape(-1)[:pk.d]
+
+
+def quantized_weighted_sum(gs: jnp.ndarray, levels: jnp.ndarray,
+                           dither: jnp.ndarray, weights: jnp.ndarray,
+                           *, r_max=None, use_kernel: bool = True,
+                           fused="auto") -> jnp.ndarray:
+    """The digital aggregation hot path: sum_i w_i * quantize(g_i).
+
+    Dispatches between the legacy two-step path (quantize-dequantize the
+    (N, d) block, then a weighted matvec — the bit-compared parity path
+    for paper-scale payloads) and the fused pack path (quantize straight
+    into a uint32 code buffer, then unpack-dequant-accumulate with an
+    O(d) accumulator — the payload-scale path).
+
+    ``r_max``: static upper bound on any device's bit-width this round
+    (each scheme knows its own); required for the fused path since the
+    packed code width is static. ``fused="auto"`` fuses only when a
+    packable r_max is known and d >= FUSED_MIN_DIM; pass True/False to
+    force. ``use_kernel=False`` with fused=True runs the sequential-order
+    jnp reference (same accumulation order as the fused kernel).
+    """
+    cb = code_bits_for(r_max)
+    d = gs.shape[1]
+    if fused == "auto":
+        fused = use_kernel and cb is not None and d >= FUSED_MIN_DIM
+    if not fused:
+        gq = dithered_quantize_batch(gs, levels, dither,
+                                     use_kernel=use_kernel)
+        return jnp.asarray(weights, gs.dtype) @ gq
+    if not use_kernel:
+        m = jnp.max(jnp.abs(gs), axis=1).astype(gs.dtype)
+        return ref.quantized_weighted_sum_ref(
+            gs, m, jnp.asarray(levels, gs.dtype), dither.astype(gs.dtype),
+            jnp.asarray(weights, gs.dtype))
+    if cb is None:
+        raise ValueError(
+            f"fused quantized_weighted_sum needs a static r_max <= "
+            f"{max(CODE_BITS_CHOICES)} (got r_max={r_max})")
+    pk = quantize_pack(gs, levels, dither, code_bits=cb)
+    return packed_weighted_sum(pk, weights)
+
+
+def row_maxabs_sumsq(gs: jnp.ndarray, *, use_kernel: bool = True,
+                     acc_dtype=None):
     """Per-device gradient statistics in one fused pass.
 
     gs: (N, d). Returns (maxabs (N,), sumsq (N,)): ``||g_m||_inf`` (the
     quantizer scale / quantization-MSE ingredient d*maxabs^2/(2^r-1)^2)
     and ``sum g_m^2`` (norm-based scheduling scores), computed by the
     Pallas row-reduction kernel (interpret on CPU, Mosaic on TPU).
+    ``acc_dtype`` widens the accumulation/output above the payload dtype
+    (bf16 payloads, f32 statistics); default gs.dtype.
     """
     if not use_kernel:
-        return jnp.max(jnp.abs(gs), axis=1), jnp.sum(gs * gs, axis=1)
+        ga = gs if acc_dtype is None else gs.astype(acc_dtype)
+        return jnp.max(jnp.abs(ga), axis=1), jnp.sum(ga * ga, axis=1)
     n_dev, d = gs.shape
-    br = _fit_block_rows(d)
+    br = _tuned_block_rows("reduce", d, gs.dtype)
     per = br * LANES
     d_pad = (-d) % per
     g2d = jnp.pad(gs, ((0, 0), (0, d_pad))).reshape(-1, LANES)
     out = row_maxabs_sumsq_2d(g2d, n_dev=n_dev, interpret=_on_cpu(),
-                              block_rows=br)
+                              block_rows=br, acc_dtype=acc_dtype)
     return out[:, 0], out[:, 1]
 
 
 def ota_combine_with_noise(g: jnp.ndarray, alpha: jnp.ndarray,
                            noise: jnp.ndarray,
-                           *, use_kernel: bool = True) -> jnp.ndarray:
+                           *, use_kernel: bool = True,
+                           acc_dtype=None) -> jnp.ndarray:
     """ghat = (g + noise)/alpha with an explicit AWGN operand (eq. (6)).
 
     ``alpha`` may be a traced per-round scalar (e.g. Vanilla OTA's n*gamma_t).
     The kernel consumes pre-scaled noise, so this computes
     g*inv_alpha + noise*inv_alpha (1-ulp from the reference (g+z)/alpha).
+    ``acc_dtype`` sets a wider accumulate/output dtype than the payload
+    (bf16 gradient payload, f32 combine); default g.dtype.
     """
-    inv_alpha = (1.0 / jnp.asarray(alpha)).astype(g.dtype)
-    z = noise.astype(g.dtype) * inv_alpha
+    out_dt = g.dtype if acc_dtype is None else jnp.dtype(acc_dtype)
+    inv_alpha = (1.0 / jnp.asarray(alpha)).astype(out_dt)
+    z = noise.astype(out_dt) * inv_alpha
     if not use_kernel:
-        return ref.ota_combine_ref(g, inv_alpha, z)
-    br = _fit_block_rows(g.size)
+        return ref.ota_combine_ref(g.astype(out_dt), inv_alpha, z)
+    br = _tuned_block_rows("ota", g.size, g.dtype)
     g2d, n = _to_blocks(g, br)
     z2d, _ = _to_blocks(z, br)
     out = ota_combine_2d(g2d, z2d, inv_alpha, interpret=_on_cpu(),
-                         block_rows=br)
-    return _from_blocks(out, n, g.shape, g.dtype)
+                         block_rows=br, acc_dtype=acc_dtype)
+    return _from_blocks(out, n, g.shape, out_dt)
 
 
 def ota_combine(g: jnp.ndarray, alpha: jnp.ndarray, noise_scale: jnp.ndarray,
@@ -159,7 +359,7 @@ def ota_combine(g: jnp.ndarray, alpha: jnp.ndarray, noise_scale: jnp.ndarray,
          * jax.random.normal(key, g.shape, jnp.float32)).astype(g.dtype)
     if not use_kernel:
         return ref.ota_combine_ref(g, inv_alpha, z)
-    br = _fit_block_rows(g.size)
+    br = _tuned_block_rows("ota", g.size, g.dtype)
     g2d, n = _to_blocks(g, br)
     z2d, _ = _to_blocks(z, br)
     out = ota_combine_2d(g2d, z2d, inv_alpha, interpret=_on_cpu(),

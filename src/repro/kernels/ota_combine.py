@@ -19,21 +19,30 @@ LANES = 128
 
 def _kernel(scal_ref, g_ref, z_ref, o_ref):
     inv_alpha = scal_ref[0, 0]
-    o_ref[...] = g_ref[...] * inv_alpha + z_ref[...]
+    # the payload block may be narrower than the accumulator (bf16
+    # payload, f32 accumulation): widen per-block before the arithmetic
+    o_ref[...] = g_ref[...].astype(inv_alpha.dtype) * inv_alpha + z_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block_rows", "acc_dtype"))
 def ota_combine_2d(g2d: jnp.ndarray, z2d: jnp.ndarray,
                    inv_alpha: jnp.ndarray,
                    interpret: bool = False,
-                   block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+                   block_rows: int = BLOCK_ROWS,
+                   acc_dtype=None) -> jnp.ndarray:
     """g2d/z2d: (R,128), R % block_rows == 0; z pre-scaled noise.
 
     ``block_rows`` tiles the grid; small tensors should pass a small tile
     (interpret-mode cost scales with the padded block, not the payload).
+    ``acc_dtype`` sets the accumulate/output dtype when it should be wider
+    than the payload dtype (mixed-precision uplink: g2d in bf16, z2d and
+    the result in f32); the payload stays narrow in HBM and widens
+    per-block in VMEM. Default: g2d.dtype (unchanged legacy behavior).
     """
     R = g2d.shape[0]
-    scal = inv_alpha.astype(g2d.dtype).reshape(1, 1)
+    out_dtype = jnp.dtype(acc_dtype) if acc_dtype is not None else g2d.dtype
+    scal = inv_alpha.astype(out_dtype).reshape(1, 1)
     return pl.pallas_call(
         _kernel,
         grid=(R // block_rows,),
@@ -43,6 +52,6 @@ def ota_combine_2d(g2d: jnp.ndarray, z2d: jnp.ndarray,
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(g2d.shape, g2d.dtype),
+        out_shape=jax.ShapeDtypeStruct(g2d.shape, out_dtype),
         interpret=interpret,
-    )(scal, g2d, z2d)
+    )(scal, g2d, z2d.astype(out_dtype))

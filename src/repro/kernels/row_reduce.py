@@ -25,9 +25,11 @@ from jax.experimental import pallas as pl
 from .dithered_quant import BLOCK_ROWS, LANES
 
 
-def _kernel(g_ref, o_ref):
+def _kernel(g_ref, o_ref, *, acc_dtype):
     j = pl.program_id(1)
-    g = g_ref[...]
+    # widen the payload block before reducing (bf16 payload, f32 stats):
+    # a bf16 sum-of-squares saturates after a few hundred terms
+    g = g_ref[...].astype(acc_dtype)
     pmax = jnp.max(jnp.abs(g))
     psum = jnp.sum(g * g)
 
@@ -43,26 +45,31 @@ def _kernel(g_ref, o_ref):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_dev", "interpret", "block_rows"))
+                   static_argnames=("n_dev", "interpret", "block_rows",
+                                    "acc_dtype"))
 def row_maxabs_sumsq_2d(g2d: jnp.ndarray, n_dev: int = None,
                         interpret: bool = False,
-                        block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+                        block_rows: int = BLOCK_ROWS,
+                        acc_dtype=None) -> jnp.ndarray:
     """g2d: (N*R_dev, LANES), device i owning rows [i*R_dev, (i+1)*R_dev).
 
     Returns (N, 2): column 0 = max|g_i|, column 1 = sum g_i^2 per device.
-    Zero padding is inert for both statistics.
+    Zero padding is inert for both statistics. ``acc_dtype`` widens the
+    accumulate/output dtype above the payload dtype (bf16 payload, f32
+    statistics); default g2d.dtype.
     """
     NR = g2d.shape[0]
+    out_dtype = jnp.dtype(acc_dtype) if acc_dtype is not None else g2d.dtype
     r_dev = NR // n_dev
     blocks_per_dev = r_dev // block_rows
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, acc_dtype=out_dtype),
         grid=(n_dev, blocks_per_dev),
         in_specs=[
             pl.BlockSpec((block_rows, LANES),
                          lambda i, j, b=blocks_per_dev: (i * b + j, 0)),
         ],
         out_specs=pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_dev, 2), g2d.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_dev, 2), out_dtype),
         interpret=interpret,
     )(g2d)

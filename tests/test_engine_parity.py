@@ -386,23 +386,45 @@ class TestUnequalSizesParity:
         with pytest.raises(ValueError, match="mini-batch size"):
             FLEngine(task, ds_u, dep, eta)
 
-    def test_engine_rejects_batch_covering_smallest(self, unequal):
+    @pytest.mark.parametrize("scheme",
+                             ["ideal_fedavg", "vanilla_ota", "uqos"])
+    def test_mixed_regime_parity(self, unequal, scheme):
+        """batch_size >= min |D_m| mixes full- and mini-batch devices.
+        Covered devices take weighted full-data gradients (1/n_m on real
+        rows, 0 on the clipped duplicates), uncovered ones the exact
+        counter-based draw — the oracle's per-device loop semantics, so
+        both backends stay in the standard parity tolerance."""
         task, ds_u, dep, eta, _ = unequal
-        with pytest.raises(ValueError, match="smaller than the smallest"):
-            FLEngine(task, ds_u, dep, eta, batch_size=64)
+        agg = ALL_SCHEME_FACTORIES[scheme](unequal, None, None)
+        tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=50)
+        log_np = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="numpy")
+        log_jx = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="jax")
+        _assert_logs_match(log_np, log_jx)
 
-    def test_mixed_regime_stays_on_numpy(self, unequal):
-        """batch_size >= min |D_m| mixes full- and mini-batch devices —
-        NumPy-loop semantics only: auto falls back, jax refuses."""
+    def test_mixed_regime_routes_to_engine(self, unequal):
+        """The mixed regime is the last regime that used to fall back to
+        the NumPy loop — auto must now route it through the engine."""
         task, ds_u, dep, eta, _ = unequal
         tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=50)
         log = tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
                      seed=0)
-        assert tr._engine is None
+        assert tr._engine is not None
         assert np.all(np.isfinite(log.global_loss))
-        with pytest.raises(ValueError, match="unequal-sized"):
-            tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
-                   seed=0, backend="jax")
+
+    def test_mixed_regime_all_devices_covered_parity(self, unequal):
+        """batch_size >= max |D_m|: every device runs full-batch through
+        the weighted path, with no batch draw consumed anywhere."""
+        task, ds_u, dep, eta, _ = unequal
+        agg = B.VanillaOTA(task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                           dep.cfg.noise_power)
+        tr = FLTrainer(task, ds_u, dep, eta=eta, batch_size=200)
+        log_np = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="numpy")
+        log_jx = tr.run(agg, rounds=MB_ROUNDS, trials=TRIALS,
+                        eval_every=EVAL_EVERY, seed=5, backend="jax")
+        _assert_logs_match(log_np, log_jx)
 
 
 class TestGreedyBitAlloc:

@@ -210,3 +210,191 @@ def test_mamba_kernel_flag_matches_jnp():
     l_j, _ = loss_fn(model, params, batch, flags={"mamba_fused": True})
     l_k, _ = loss_fn(model, params, batch, flags={"mamba_kernel": True})
     np.testing.assert_allclose(float(l_j), float(l_k), rtol=1e-4)
+
+
+# ------------------------------------------- fused payload pipeline
+
+from repro.kernels import autotune  # noqa: E402
+
+
+@pytest.fixture
+def tuner_cache():
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+@pytest.mark.parametrize("d", ODD_DIMS)
+def test_quantize_pack_roundtrip_exact(d):
+    """pack -> unpack == the two-step quantize-dequantize, bit for bit:
+    codes are integers < 2^24 so the uint32 round-trip through f32 is
+    exact, including non-divisible dims, heterogeneous per-device
+    bit-widths, and levels<=0 degenerate rows (exact zeros)."""
+    rng = np.random.default_rng(d)
+    n_dev = 6
+    gs = jnp.asarray(rng.normal(size=(n_dev, d)), jnp.float32)
+    us = jnp.asarray(rng.uniform(size=(n_dev, d)), jnp.float32)
+    # device 0 granted no bits (levels=0) -> must decode to exact zeros
+    levels = jnp.asarray([0.0, 1.0, 3.0, 15.0, 63.0, 255.0], jnp.float32)
+    pk = ops.quantize_pack(gs, levels, us, code_bits=8)
+    dec = ops.unpack_dequant(pk)
+    two_step = ops.dithered_quantize_batch(gs, levels, us)
+    assert dec.shape == (n_dev, d)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(two_step))
+    assert not np.any(np.asarray(dec[0]))
+
+
+@pytest.mark.parametrize("code_bits", [4, 8, 16])
+def test_quantize_pack_roundtrip_all_code_widths(code_bits):
+    """Every packable code width (K = 32/code_bits codes per word) is a
+    bit-exact inverse pair at max bit-width for that word size."""
+    rng = np.random.default_rng(code_bits)
+    n_dev, d = 3, 5000
+    gs = jnp.asarray(rng.normal(size=(n_dev, d)), jnp.float32)
+    us = jnp.asarray(rng.uniform(size=(n_dev, d)), jnp.float32)
+    levels = jnp.full(n_dev, float(2 ** code_bits - 1), jnp.float32)
+    pk = ops.quantize_pack(gs, levels, us, code_bits=code_bits)
+    assert pk.words.dtype == jnp.uint32
+    two_step = ops.dithered_quantize_batch(gs, levels, us)
+    np.testing.assert_array_equal(np.asarray(ops.unpack_dequant(pk)),
+                                  np.asarray(two_step))
+
+
+def test_quantize_pack_roundtrip_exact_f64():
+    """Same bit-exactness under scoped x64 (the engine's precision)."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        rng = np.random.default_rng(42)
+        gs = jnp.asarray(rng.normal(size=(4, 3001)))
+        us = jnp.asarray(rng.uniform(size=(4, 3001)))
+        levels = jnp.asarray([255.0, 15.0, 0.0, 7.0])
+        assert gs.dtype == jnp.float64
+        pk = ops.quantize_pack(gs, levels, us, code_bits=8)
+        dec = ops.unpack_dequant(pk)
+        assert dec.dtype == jnp.float64
+        np.testing.assert_array_equal(
+            np.asarray(dec),
+            np.asarray(ops.dithered_quantize_batch(gs, levels, us)))
+
+
+@pytest.mark.parametrize("n_dev,d", [(4, 1000), (8, 200_000), (5, 131_073)])
+def test_quantized_weighted_sum_fused_matches_two_step(n_dev, d):
+    """Fused kernel == sequential jnp reference == two-step quantize +
+    matvec, to accumulation-order tolerance (FMA contraction / summation
+    association differ; the payload decode itself is bit-exact). Covers
+    the device-blocked launch (n_dev divisible by the group) and the
+    tiled fallback (n_dev=5)."""
+    rng = np.random.default_rng(n_dev)
+    gs = jnp.asarray(rng.normal(size=(n_dev, d)), jnp.float32)
+    us = jnp.asarray(rng.uniform(size=(n_dev, d)), jnp.float32)
+    levels = jnp.asarray([float(2 ** (1 + (i % 8)) - 1)
+                          for i in range(n_dev)], jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=n_dev), jnp.float32)
+    fused_k = ops.quantized_weighted_sum(gs, levels, us, w, r_max=8,
+                                         fused=True)
+    fused_r = ops.quantized_weighted_sum(gs, levels, us, w, r_max=8,
+                                         fused=True, use_kernel=False)
+    two_step = ops.quantized_weighted_sum(gs, levels, us, w, fused=False)
+    np.testing.assert_allclose(np.asarray(fused_k), np.asarray(fused_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused_k), np.asarray(two_step),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_quantized_weighted_sum_degenerate_device_contributes_zero():
+    """A device with levels<=0 must drop out of the fused sum exactly."""
+    rng = np.random.default_rng(9)
+    gs = jnp.asarray(rng.normal(size=(2, 4000)), jnp.float32)
+    us = jnp.asarray(rng.uniform(size=(2, 4000)), jnp.float32)
+    levels = jnp.asarray([0.0, 255.0], jnp.float32)
+    only_dead = ops.quantized_weighted_sum(gs, levels, us,
+                                           jnp.asarray([1.0, 0.0]),
+                                           r_max=8, fused=True)
+    assert not np.any(np.asarray(only_dead))
+
+
+def test_code_bits_for_mapping():
+    """Static code-width dispatch: smallest packable width covering r_max,
+    None above 16 bits (no exact f32 round-trip) or when r_max unknown."""
+    assert ops.code_bits_for(None) is None
+    assert ops.code_bits_for(1) == 4
+    assert ops.code_bits_for(4) == 4
+    assert ops.code_bits_for(5) == 8
+    assert ops.code_bits_for(8) == 8
+    assert ops.code_bits_for(9) == 16
+    assert ops.code_bits_for(16) == 16
+    assert ops.code_bits_for(17) is None
+
+
+def test_ota_combine_bf16_payload_f32_accumulate():
+    """bf16 gradient payload with f32 combine: output is f32 and within
+    bf16 representation error of the all-f32 kernel."""
+    rng = np.random.default_rng(21)
+    g32 = jnp.asarray(rng.normal(size=100_003), jnp.float32)
+    z = jnp.asarray(rng.normal(size=100_003), jnp.float32)
+    alpha = jnp.asarray(2.5)
+    out32 = ops.ota_combine_with_noise(g32, alpha, z)
+    out16 = ops.ota_combine_with_noise(g32.astype(jnp.bfloat16), alpha, z,
+                                       acc_dtype=jnp.float32)
+    assert out16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out16), np.asarray(out32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_row_maxabs_sumsq_bf16_payload_f32_accumulate():
+    """Per-device stats on a bf16 payload accumulate/return in f32 and stay
+    within bf16 mantissa error of the f32 stats."""
+    rng = np.random.default_rng(22)
+    gs32 = jnp.asarray(rng.normal(size=(4, 70_001)), jnp.float32)
+    m32, s32 = ops.row_maxabs_sumsq(gs32)
+    m16, s16 = ops.row_maxabs_sumsq(gs32.astype(jnp.bfloat16),
+                                    acc_dtype=jnp.float32)
+    assert m16.dtype == jnp.float32 and s16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(m16), np.asarray(m32), rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s32), rtol=1e-2)
+
+
+def test_autotuner_cache_determinism(tuner_cache):
+    """One measurement sweep per (kind, rows, dtype, backend); the second
+    call is a pure cache hit with the same answer, and candidates above
+    the payload's own pow2 row count are never measured."""
+    measured = []
+
+    def bench(br):
+        def fn():
+            measured.append(br)
+            return np.zeros(1)
+        return fn
+
+    before = autotune.measure_count
+    first = autotune.choose_block_rows("testkind", 1000, jnp.float32,
+                                       bench=bench)
+    n_after_sweep = len(measured)
+    second = autotune.choose_block_rows("testkind", 1000, jnp.float32,
+                                        bench=bench)
+    assert first == second
+    assert autotune.measure_count == before + 1
+    assert len(measured) == n_after_sweep        # cache hit: no re-measure
+    assert set(measured) <= {256, 512, 1024}     # capped at _pow2_fit(1000)
+    assert first in set(measured)
+
+
+def test_autotuner_small_rows_skip_measurement(tuner_cache):
+    """Below the legacy tile the deterministic pow2 clamp answers without
+    ever invoking the bench."""
+    def bench(br):
+        raise AssertionError("small payloads must not be measured")
+
+    assert autotune.choose_block_rows("testkind", 100, jnp.float32,
+                                      bench=bench) == 128
+
+
+def test_autotuner_env_disable(tuner_cache, monkeypatch):
+    """REPRO_AUTOTUNE=0 pins the legacy fixed tile (determinism hatch)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+
+    def bench(br):
+        raise AssertionError("disabled tuner must not measure")
+
+    assert autotune.choose_block_rows("testkind", 100_000, jnp.float32,
+                                      bench=bench) == autotune.DEFAULT_BLOCK_ROWS

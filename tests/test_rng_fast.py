@@ -180,3 +180,75 @@ class TestSweepAxis:
         cells = plan(sweep).cells
         assert len(cells) == 2
         assert len({c.cell_hash for c in cells}) == 2
+
+
+class TestPayloadDtype:
+    """run.payload_dtype="bf16": half-width uplink gradient payloads with
+    f32 accumulation — a lossy knob, so the gate is the fast-RNG suite's
+    statistical-equivalence test, not bit parity."""
+
+    def _run_pd(self, setup, agg, payload_dtype, *, trials, rounds=30,
+                seed=5):
+        task, ds, dep, eta = setup
+        tr = FLTrainer(task, ds, dep, eta=eta, payload_dtype=payload_dtype)
+        return tr.run(agg, rounds=rounds, trials=trials, eval_every=10,
+                      seed=seed, backend="jax")
+
+    def test_bf16_statistically_equivalent_to_f32(self, setup):
+        """bf16 payload rounding is a small perturbation next to the
+        channel noise: mean trajectories agree within Monte-Carlo error."""
+        task, _, dep, _ = setup
+        args = (task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                dep.cfg.noise_power)
+        log32 = self._run_pd(setup, B.VanillaOTA(*args), "f32", trials=12)
+        log16 = self._run_pd(setup, B.VanillaOTA(*args), "bf16", trials=12)
+        _assert_statistically_equivalent(log32, log16)
+
+    def test_bf16_actually_differs(self, setup):
+        """The cast must bite — bf16 is not silently f32."""
+        task, _, dep, _ = setup
+        args = (task.dim, task.g_max, dep.cfg.energy_per_symbol,
+                dep.cfg.noise_power)
+        log32 = self._run_pd(setup, B.VanillaOTA(*args), "f32", trials=2)
+        log16 = self._run_pd(setup, B.VanillaOTA(*args), "bf16", trials=2)
+        assert not np.allclose(log32.global_loss, log16.global_loss,
+                               rtol=1e-10)
+
+    def test_bf16_rejected_on_numpy_backend(self, setup):
+        task, ds, dep, eta = setup
+        tr = FLTrainer(task, ds, dep, eta=eta, payload_dtype="bf16")
+        with pytest.raises(ValueError, match="JAX engine"):
+            tr.run(B.IdealFedAvg(), rounds=4, trials=1, eval_every=2,
+                   backend="numpy")
+
+    def test_bf16_rejected_for_unported_scheme(self, setup):
+        class Unported(B.Aggregator):
+            name = "unported"
+
+            def round(self, grads, h, t, rng, dither=None):
+                g = np.mean(np.stack([np.asarray(g) for g in grads]), 0)
+                return B.RoundResult(g, 0.0, np.ones(len(grads)), {})
+
+        task, ds, dep, eta = setup
+        tr = FLTrainer(task, ds, dep, eta=eta, payload_dtype="bf16")
+        with pytest.raises(ValueError, match="NumPy path"):
+            tr.run(Unported(), rounds=4, trials=1, eval_every=2)
+
+    def test_payload_dtype_validation(self, setup):
+        task, ds, dep, eta = setup
+        with pytest.raises(ValueError, match="payload_dtype"):
+            FLTrainer(task, ds, dep, eta=eta, payload_dtype="f16")
+
+    def test_run_payload_dtype_is_sweepable_and_changes_hashes(self):
+        from repro.api.plan import plan
+        from repro.api.spec import ScenarioSpec, SweepSpec
+
+        base = ScenarioSpec(name="pd_axis")
+        sweep = SweepSpec(name="pd_axis", base=base,
+                          axes={"run.payload_dtype": ("f32", "bf16")})
+        pts = sweep.points()
+        assert [sc.run.payload_dtype for _, sc in pts] == ["f32", "bf16"]
+        assert len({sc.spec_hash() for _, sc in pts}) == 2
+        cells = plan(sweep).cells
+        assert len(cells) == 2
+        assert len({c.cell_hash for c in cells}) == 2
