@@ -19,6 +19,19 @@ process pool with serial-identical artifacts. Both are demoed below:
 ``run.rng`` is swept as an ordinary axis and the grid executes with
 ``jobs=2``.
 
+The wireless fault layer (ROADMAP.md "Fault model") rides the same
+rails: declare ``fault=FaultSpec(...)`` on the scenario and sweep
+``fault.dropout_prob`` / ``fault.deep_fade_thresh`` / ``fault.*`` like
+any other dotted axis — e.g.
+
+    SweepSpec(name="faults", base=base,
+              axes={"fault.dropout_prob": (0.0, 0.2, 0.5)})
+
+``fault.on_missing`` picks the aggregation policy for devices that miss
+a round ("reweight" = unbiased inverse-propensity, "zero" =
+participation bias the Sec.-IV bound prices, "stale" = last-gradient
+replay); ``benchmarks/sweep_fault.py`` is the worked example.
+
     PYTHONPATH=src python examples/quickstart.py
 
 The same sweeps drive the figure pipelines and the CLI:

@@ -20,11 +20,17 @@
 # the payload-scale kernel bench (fused quantize->pack->dequant-aggregate
 # vs materialize-then-sum at N=256, d=10^6: must win both wall-clock and
 # peak RSS under the 2 GB budget, recorded to BENCH_kernel_payload.json),
-# and the declarative scenario-sweep smoke: a 2x2 grid through
+# the declarative scenario-sweep smoke: a 2x2 grid through
 # `python -m repro.api.cli run sweep_smoke --jobs 2` (one batched design
 # solve for the grid, cells on a 2-worker spawn pool), asserting the
 # ResultSet manifest is written and that re-running the finished sweep
-# is a cache no-op (--expect-cached).
+# is a cache no-op (--expect-cached), the fault/chaos suite
+# (counter-based FAULT-stream parity + on_missing policy oracle parity,
+# worker-SIGKILL recovery with serial-identical manifests, hung cell ->
+# status="timeout", corrupt-cache quarantine), and the fault-injection
+# sweep smoke: the dropout x heterogeneity grid of
+# `benchmarks/sweep_fault.py --smoke` on a 2-worker pool (fault-aware
+# batched design + graceful-degradation reduction).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -76,15 +82,26 @@ python -m repro.api.cli run sweep_smoke --jobs 2 \
     && python -m repro.api.cli run sweep_smoke --expect-cached
 sweep_status=$?
 
+echo "== fault/chaos suite (FAULT-stream parity; worker-kill, timeout, quarantine) =="
+python -m pytest -q tests/test_faults.py tests/test_parallel_executor.py
+fault_status=$?
+
+echo "== fault-injection sweep smoke (dropout x heterogeneity, --jobs 2) =="
+rm -rf "experiments/results/scenarios/sweep_fault"
+python -m benchmarks.sweep_fault --smoke --jobs 2
+faultsweep_status=$?
+
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
         || [ "$minibatch_status" -ne 0 ] || [ "$design_status" -ne 0 ] \
         || [ "$mem_status" -ne 0 ] || [ "$fastrng_status" -ne 0 ] \
         || [ "$scale_status" -ne 0 ] || [ "$payload_status" -ne 0 ] \
-        || [ "$sweep_status" -ne 0 ]; then
+        || [ "$sweep_status" -ne 0 ] || [ "$fault_status" -ne 0 ] \
+        || [ "$faultsweep_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
          "minibatch=$minibatch_status design=$design_status" \
          "mem=$mem_status fastrng=$fastrng_status scale=$scale_status" \
-         "payload=$payload_status sweep=$sweep_status)" >&2
+         "payload=$payload_status sweep=$sweep_status" \
+         "fault=$fault_status faultsweep=$faultsweep_status)" >&2
     exit 1
 fi
 echo "verify OK"

@@ -61,10 +61,13 @@ def _cmd_run(args) -> int:
     pl = plan(spec)
     out_dir = Path(args.out) if args.out else default_out_dir(pl.name)
     rs = execute(pl, out_dir=out_dir, force=args.force, jobs=args.jobs,
+                 cell_timeout_s=args.cell_timeout, retries=args.retries,
                  progress=lambda msg: print(msg, flush=True))
     computed = sum(c.status == "computed" for c in rs.cells)
     cached = sum(c.status == "cached" for c in rs.cells)
-    print(f"{rs.name}: {computed} computed, {cached} cached "
+    timeout = sum(c.status == "timeout" for c in rs.cells)
+    extra = f", {timeout} timed out" if timeout else ""
+    print(f"{rs.name}: {computed} computed, {cached} cached{extra} "
           f"-> {out_dir}")
     if args.expect_cached and computed:
         print(f"FAIL: --expect-cached but {computed} cell(s) recomputed "
@@ -97,6 +100,13 @@ def main(argv=None) -> int:
     p.add_argument("--jobs", type=int, default=1, metavar="K",
                    help="run non-cached cells on a K-worker process pool "
                         "(same manifest and resume semantics as serial)")
+    p.add_argument("--cell-timeout", type=float, default=None, metavar="S",
+                   help="per-cell compute timeout on the worker pool; "
+                        'exhausted cells finalize as status="timeout" '
+                        "(parallel runs only)")
+    p.add_argument("--retries", type=int, default=2, metavar="N",
+                   help="extra attempts a timed-out or worker-crashed "
+                        "cell gets before finalizing (default 2)")
     p.add_argument("--expect-cached", action="store_true",
                    help="exit 1 if any cell was (re)computed")
 

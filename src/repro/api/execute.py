@@ -17,22 +17,36 @@
    rev, per-cell status/timings) land under ``out_dir``; re-running a
    half-finished sweep recomputes only the missing cells.
 
-``execute(..., jobs=K)`` runs independent cells on a ``K``-worker spawn
-process pool: the main process still does the cache check and the grouped
-batched design solves (walking ``Plan.schedule()`` so every group lands
-before its dependents), then ships each cell to a worker as pure data —
-the scenario dict, the solved design parameters ("design pack") and the
-memoized kappa estimates — because live contexts hold jitted closures and
-don't pickle. Workers write ``cells/<hash>.json`` the moment a cell
-finishes and errors are collected (not fail-fast), so a crashed or
-cancelled parallel sweep resumes exactly like a serial one; the manifest
-is byte-identical to serial execution (modulo wall-clock timings).
+``execute(..., jobs=K)`` runs independent cells on a supervised pool of
+``K`` persistent spawn workers: the main process still does the cache
+check and the grouped batched design solves (walking ``Plan.schedule()``
+so every group lands before its dependents), then ships each cell to a
+worker as pure data — the scenario dict, the solved design parameters
+("design pack") and the memoized kappa estimates — because live contexts
+hold jitted closures and don't pickle. Workers write ``cells/<hash>.json``
+the moment a cell finishes and errors are collected (not fail-fast), so a
+crashed or cancelled parallel sweep resumes exactly like a serial one;
+the manifest is byte-identical to serial execution (modulo wall-clock
+timings).
+
+The supervisor also hardens the pool against wireless-lab realities:
+a worker that dies mid-cell (OOM kill, segfault) gets its cell requeued
+on a fresh worker with exponential backoff (``retries`` extra attempts);
+a cell still running ``cell_timeout_s`` seconds after its worker
+*started* it (spawn + JAX import time excluded) has the worker
+terminated and, once retries are exhausted, surfaces as
+``status="timeout"`` with an empty payload instead of hanging the sweep.
+Deterministic Python exceptions are never retried.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import logging
+import os
+import signal
 import time
+import traceback
 from pathlib import Path
 from typing import Callable, Optional
 
@@ -46,6 +60,9 @@ from .results import (DEFAULT_RESULTS_ROOT, SCHEMA_VERSION, CellResult,
 from .spec import ScenarioSpec
 
 
+logger = logging.getLogger(__name__)
+
+
 def default_out_dir(name: str) -> Path:
     return DEFAULT_RESULTS_ROOT / "scenarios" / name
 
@@ -55,7 +72,18 @@ def _load_cached(path: Path) -> Optional[dict]:
         return None
     try:
         payload = json.loads(path.read_text())
-    except (OSError, json.JSONDecodeError):
+    except json.JSONDecodeError:
+        # corrupt cache cell (truncated write, disk hiccup): quarantine it
+        # under <name>.json.bad so the evidence survives, and recompute
+        bad = path.with_name(path.name + ".bad")
+        try:
+            path.replace(bad)
+        except OSError:
+            return None
+        logger.warning("quarantined corrupt result cell %s -> %s; "
+                       "the cell will be recomputed", path, bad.name)
+        return None
+    except OSError:
         return None
     if payload.get("schema_version") != SCHEMA_VERSION:
         return None
@@ -150,10 +178,35 @@ def _design_pack(ctx) -> tuple:
 _WORKER_MEMO = None
 
 
+def _chaos_hook(cell_hash: str) -> None:
+    """Test-only fault injection for the supervisor (env-gated, inert
+    otherwise; spawn workers inherit the parent environment).
+
+    ``REPRO_CHAOS_KILL_DIR=<dir>`` — SIGKILL exactly one worker, once per
+    directory (atomic ``O_CREAT|O_EXCL`` marker), simulating an OOM kill.
+    ``REPRO_CHAOS_HANG_HASH=<prefix>`` — cells whose hash matches the
+    prefix hang, exercising the per-cell timeout path.
+    """
+    kill_dir = os.environ.get("REPRO_CHAOS_KILL_DIR")
+    if kill_dir:
+        try:
+            fd = os.open(os.path.join(kill_dir, "killed"),
+                         os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            pass
+        else:
+            os.close(fd)
+            os.kill(os.getpid(), signal.SIGKILL)
+    hang = os.environ.get("REPRO_CHAOS_HANG_HASH")
+    if hang and cell_hash.startswith(hang):
+        time.sleep(3600)
+
+
 def _worker_run_cell(job):
     """Pool worker: re-materialize one cell from pure data and run it."""
     (scenario_dict, index, overrides, cell_hash, design_pack, memo_seed,
      cells_dir) = job
+    _chaos_hook(cell_hash)
     global _WORKER_MEMO
     if _WORKER_MEMO is None:
         _WORKER_MEMO = mat.new_memo()
@@ -174,80 +227,246 @@ def _worker_run_cell(job):
     return index, payload
 
 
+def _pool_worker(wid: int, jobq, resq) -> None:
+    """Persistent parallel-sweep worker: drain jobs until the sentinel.
+
+    Announces ``("start", wid, index)`` *before* running a cell so the
+    supervisor's per-cell timeout clock starts at actual work start —
+    process spawn and the first JAX import are never billed to a cell.
+    """
+    while True:
+        job = jobq.get()
+        if job is None:
+            return
+        index = job[1]
+        resq.put(("start", wid, index))
+        try:
+            _, payload = _worker_run_cell(job)
+        except BaseException:              # noqa: BLE001 — shipped to parent
+            resq.put(("error", wid, index, traceback.format_exc()))
+        else:
+            resq.put(("ok", wid, index, payload))
+
+
 def _run_parallel(pl: Plan, todo, contexts, memo, cells_dir: Path,
-                  save: bool, jobs: int, say, results) -> None:
-    """Dispatch non-cached cells to a spawn pool, designs solved inline.
+                  save: bool, jobs: int, say, results,
+                  cell_timeout_s: Optional[float] = None,
+                  retries: int = 2) -> None:
+    """Dispatch non-cached cells to supervised persistent spawn workers,
+    designs solved inline in the main process.
 
     Spawn (not fork): the parent has long since initialized JAX, and
     forking a process with a live XLA runtime is undefined behavior.
-    Errors are collected, not fail-fast — completed cells persist their
-    ``cells/<hash>.json`` first, so the re-run resumes from them.
+
+    Degradation ladder per cell (supervisor loop):
+
+    * worker raises a Python exception — deterministic, never retried;
+      collected (not fail-fast) and re-raised after the sweep drains, so
+      completed cells persist their ``cells/<hash>.json`` and a re-run
+      resumes from them;
+    * worker process dies mid-cell — the cell is requeued on a fresh
+      worker with exponential backoff (0.25 * 2^attempt s), up to
+      ``retries`` extra attempts; exhausted crashes raise;
+    * cell exceeds ``cell_timeout_s`` (measured from the worker's
+      "start" message) — the worker is terminated and the cell retried
+      the same way; exhausted timeouts finalize as ``status="timeout"``
+      with an empty payload instead of raising (the sweep's other cells
+      stay usable).
+
+    A late result that arrives after its cell was requeued is accepted
+    if the cell is not yet finalized and ignored as a duplicate if it is.
     """
     import multiprocessing as mp
-    from concurrent.futures import ProcessPoolExecutor, as_completed
+    import queue as queue_mod
 
     todo_idx = {c.index for c in todo}
     memo_seed = {k: v for k, v in memo._store.items()
                  if isinstance(k, tuple) and k and k[0] == "kappa"}
-    futures = {}
-    with ProcessPoolExecutor(
-            max_workers=min(jobs, len(todo)),
-            mp_context=mp.get_context("spawn")) as pool:
-        for kind, item in pl.schedule():
-            if kind == "design":
-                live = [i for i in item.cell_indices if i in todo_idx]
-                if not live:
-                    continue
-                say(f"design {item.family} (N={item.n_devices}): "
-                    f"{len(live)} point(s), "
-                    + ("one batched jit" if item.batched else item.solver))
-                _solve_group(_filtered(item, live), contexts)
-            elif item.index in todo_idx:
-                cell = item
-                job = (cell.scenario.to_dict(), cell.index, cell.overrides,
-                       cell.cell_hash, _design_pack(contexts[cell.index]),
-                       memo_seed, str(cells_dir) if save else None)
-                say(f"cell {cell.index} [{cell.cell_hash}] -> worker "
-                    f"({len(schemes.expand_schemes(cell.scenario.schemes))} "
-                    "schemes)")
-                futures[pool.submit(_worker_run_cell, job)] = cell
-        errors = []
-        for fut in as_completed(futures):
-            cell = futures[fut]
-            try:
-                index, payload = fut.result()
-            except BaseException as err:       # noqa: BLE001 — collected
-                errors.append((cell, err))
+    cell_by_index = {c.index: c for c in todo}
+
+    # walk the dependency-ordered schedule: every design group solves (one
+    # batched jit) before its first dependent cell's job is enqueued
+    queue_jobs = []
+    for kind, item in pl.schedule():
+        if kind == "design":
+            live = [i for i in item.cell_indices if i in todo_idx]
+            if not live:
                 continue
-            results[index] = CellResult(
-                index=index, cell_hash=cell.cell_hash,
-                overrides=cell.overrides, status="computed",
-                path=cells_dir / f"{cell.cell_hash}.json" if save else None,
-                payload=payload)
-            say(f"cell {cell.index} [{cell.cell_hash}] done")
+            say(f"design {item.family} (N={item.n_devices}): "
+                f"{len(live)} point(s), "
+                + ("one batched jit" if item.batched else item.solver))
+            _solve_group(_filtered(item, live), contexts)
+        elif item.index in todo_idx:
+            cell = item
+            job = (cell.scenario.to_dict(), cell.index, cell.overrides,
+                   cell.cell_hash, _design_pack(contexts[cell.index]),
+                   memo_seed, str(cells_dir) if save else None)
+            say(f"cell {cell.index} [{cell.cell_hash}] -> worker "
+                f"({len(schemes.expand_schemes(cell.scenario.schemes))} "
+                "schemes)")
+            queue_jobs.append(job)
+
+    total = len(queue_jobs)
+    ctx_mp = mp.get_context("spawn")
+    resq = ctx_mp.Queue()
+    n_workers = min(jobs, total)
+
+    def _spawn_worker(wid):
+        jobq = ctx_mp.Queue()
+        proc = ctx_mp.Process(target=_pool_worker, args=(wid, jobq, resq),
+                              daemon=True)
+        proc.start()
+        return {"proc": proc, "jobq": jobq, "index": None, "job": None,
+                "started": None}
+
+    ready = list(queue_jobs)       # FIFO of jobs awaiting a worker
+    delayed = []                   # [(not_before, job)] backoff requeues
+    attempts = {job[1]: 0 for job in queue_jobs}
+    finalized: set[int] = set()
+    errors = []
+    workers = {wid: _spawn_worker(wid) for wid in range(n_workers)}
+    next_wid = n_workers
+
+    def _finish_ok(index, payload):
+        cell = cell_by_index[index]
+        results[index] = CellResult(
+            index=index, cell_hash=cell.cell_hash,
+            overrides=cell.overrides, status="computed",
+            path=cells_dir / f"{cell.cell_hash}.json" if save else None,
+            payload=payload)
+        finalized.add(index)
+        say(f"cell {cell.index} [{cell.cell_hash}] done")
+
+    try:
+        while len(finalized) < total:
+            now = time.monotonic()
+            ready.extend(j for t, j in delayed if t <= now)
+            delayed = [(t, j) for t, j in delayed if t > now]
+
+            # hand ready jobs to idle live workers (skip jobs finalized by
+            # a late result that landed while they waited in the queue)
+            for w in workers.values():
+                while ready and ready[0][1] in finalized:
+                    ready.pop(0)
+                if not ready:
+                    break
+                if w["index"] is None and w["proc"].is_alive():
+                    job = ready.pop(0)
+                    w["index"], w["job"], w["started"] = job[1], job, None
+                    w["jobq"].put(job)
+
+            try:
+                msg = resq.get(timeout=0.1)
+            except queue_mod.Empty:
+                msg = None
+            if msg is not None:
+                tag, wid, index = msg[0], msg[1], msg[2]
+                w = workers.get(wid)
+                if tag == "start":
+                    if w is not None and w["index"] == index:
+                        w["started"] = time.monotonic()
+                else:
+                    if index not in finalized:
+                        if tag == "ok":
+                            _finish_ok(index, msg[3])
+                        else:   # deterministic Python error: never retried
+                            errors.append((cell_by_index[index], msg[3]))
+                            finalized.add(index)
+                    if w is not None and w["index"] == index:
+                        w["index"] = w["job"] = w["started"] = None
+                continue        # drain results before liveness checks
+
+            # liveness + per-cell deadline sweep
+            now = time.monotonic()
+            for wid in list(workers):
+                w = workers[wid]
+                alive = w["proc"].is_alive()
+                timed_out = (alive and cell_timeout_s is not None
+                             and w["started"] is not None
+                             and now - w["started"] > cell_timeout_s)
+                if alive and not timed_out:
+                    continue
+                index, job = w["index"], w["job"]
+                if timed_out:
+                    w["proc"].kill()
+                w["proc"].join(timeout=5)
+                del workers[wid]
+                if index is not None and index not in finalized:
+                    cell = cell_by_index[index]
+                    attempts[index] += 1
+                    why = ("timed out" if timed_out
+                           else "lost its worker")
+                    if attempts[index] > retries:
+                        if timed_out:
+                            say(f"cell {cell.index} [{cell.cell_hash}] "
+                                f"{why}; retries exhausted -> "
+                                'status="timeout"')
+                            results[index] = CellResult(
+                                index=index, cell_hash=cell.cell_hash,
+                                overrides=cell.overrides, status="timeout",
+                                path=None, payload={})
+                            finalized.add(index)
+                        else:
+                            errors.append((
+                                cell,
+                                f"cell {why} {attempts[index]} time(s) "
+                                "with no result"))
+                            finalized.add(index)
+                    else:
+                        backoff = 0.25 * 2.0 ** (attempts[index] - 1)
+                        say(f"cell {cell.index} [{cell.cell_hash}] {why}; "
+                            f"retry {attempts[index]}/{retries} in "
+                            f"{backoff:.2f}s")
+                        delayed.append((now + backoff, job))
+                if len(finalized) < total and len(workers) < n_workers:
+                    workers[next_wid] = _spawn_worker(next_wid)
+                    next_wid += 1
+    finally:
+        for w in workers.values():
+            if w["proc"].is_alive():
+                w["jobq"].put(None)
+        for w in workers.values():
+            w["proc"].join(timeout=5)
+            if w["proc"].is_alive():
+                w["proc"].kill()
+                w["proc"].join(timeout=5)
+
     if errors:
-        cell, err = errors[0]
+        cell, detail = errors[0]
         raise RuntimeError(
-            f"{len(errors)} of {len(futures)} sweep cell(s) failed in "
+            f"{len(errors)} of {total} sweep cell(s) failed in "
             f"workers (first: cell {cell.index} [{cell.cell_hash}]); "
-            "completed cells are cached — re-run to resume") from err
+            "completed cells are cached — re-run to resume"
+        ) from RuntimeError(str(detail))
 
 
 def execute(spec_or_plan, *, out_dir: Optional[Path] = None,
             force: bool = False, save: bool = True, jobs: int = 1,
+            cell_timeout_s: Optional[float] = None, retries: int = 2,
             progress: Optional[Callable[[str], None]] = None) -> ResultSet:
     """Execute a scenario/sweep/plan into a ``ResultSet``.
 
     ``force=True`` ignores (and overwrites) cached cells; ``save=False``
     keeps the result in memory only (used by tests); ``jobs=K`` (K > 1)
-    runs non-cached cells on a K-worker process pool — same manifest,
-    same per-cell artifacts, same resume semantics as serial.
+    runs non-cached cells on a supervised K-worker process pool — same
+    manifest, same per-cell artifacts, same resume semantics as serial.
+    ``cell_timeout_s`` bounds one cell's compute time on the pool (the
+    clock starts when a worker picks the cell up; exhausted cells finalize
+    as ``status="timeout"``); ``retries`` is the number of *extra*
+    attempts a timed-out or worker-crashed cell gets before finalizing.
+    Both apply to the parallel path only — serial execution runs in-process
+    and cannot be preempted.
     """
     say = progress if progress is not None else (lambda msg: None)
     pl = (spec_or_plan if isinstance(spec_or_plan, Plan)
           else make_plan(spec_or_plan))
     if jobs < 1:
         raise ValueError(f"jobs must be >= 1, got {jobs}")
+    if retries < 0:
+        raise ValueError(f"retries must be >= 0, got {retries}")
+    if cell_timeout_s is not None and cell_timeout_s <= 0:
+        raise ValueError(
+            f"cell_timeout_s must be positive, got {cell_timeout_s}")
     out_dir = Path(out_dir) if out_dir is not None else \
         default_out_dir(pl.name)
     cells_dir = out_dir / "cells"
@@ -275,7 +494,8 @@ def execute(spec_or_plan, *, out_dir: Optional[Path] = None,
     todo_idx = set(contexts)
     if jobs > 1 and todo:
         _run_parallel(pl, todo, contexts, memo, cells_dir, save, jobs,
-                      say, results)
+                      say, results, cell_timeout_s=cell_timeout_s,
+                      retries=retries)
     else:
         for kind, item in pl.schedule():
             if kind == "design":

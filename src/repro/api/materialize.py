@@ -18,6 +18,7 @@ import numpy as np
 from ..core import digital_design, ota_design
 from ..core.bounds import ObjectiveWeights
 from ..core.channel import Deployment, make_deployment
+from ..core.faults import effective_lambdas
 from ..data.loader import FLDataset
 from ..data.partition import partition_by_class
 from ..data.synthetic import SyntheticSpec, make_classification_dataset
@@ -156,16 +157,23 @@ class CellContext:
         return self.scenario.design.top_k
 
     def design_spec(self, family: str):
-        """The Sec.-IV design-problem spec of one family for this cell."""
+        """The Sec.-IV design-problem spec of one family for this cell.
+
+        Under fault injection the solvers see the *outage-adjusted*
+        effective channel statistics (``core.faults.effective_lambdas``),
+        so the designed bias prices the deep-fade survival regime; with
+        faults disabled this is the identity and the spec is unchanged.
+        """
         cfg = self.dep.cfg
+        lam = effective_lambdas(self.dep.lambdas, self.scenario.fault)
         if family == "ota":
             return ota_design.OTADesignSpec(
-                lambdas=self.dep.lambdas, dim=self.task.dim,
+                lambdas=lam, dim=self.task.dim,
                 g_max=self.task.g_max, e_s=cfg.energy_per_symbol,
                 n0=cfg.noise_power, weights=self.weights)
         if family == "digital":
             return digital_design.DigitalDesignSpec(
-                lambdas=self.dep.lambdas, dim=self.task.dim,
+                lambdas=lam, dim=self.task.dim,
                 g_max=self.task.g_max, e_s=cfg.energy_per_symbol,
                 n0=cfg.noise_power, bandwidth_hz=cfg.bandwidth_hz,
                 t_max_s=self.scenario.design.t_max_s, weights=self.weights)
@@ -227,7 +235,7 @@ new_memo = _Memo
 def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
                  seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1),
                  backend="auto", batch_size=None, rng="replay",
-                 payload_dtype="f32"):
+                 payload_dtype="f32", fault=None):
     """Per-scheme step-size grid search (paper Sec. V: 'step sizes for all
     schemes are tuned via a small grid search'), then the full MC run.
 
@@ -243,7 +251,7 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
         for frac in etas:
             tr = FLTrainer(task, ds, dep, eta=frac * eta_max,
                            batch_size=batch_size,
-                           payload_dtype=payload_dtype)
+                           payload_dtype=payload_dtype, fault=fault)
             probe = tr.run(agg, rounds=rounds, trials=1,
                            eval_every=max(rounds // 4, 1), seed=seed + 91,
                            time_budget_s=time_budget_s, backend=backend,
@@ -252,7 +260,7 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
             if acc > best_acc:
                 best_acc, best_eta = acc, frac * eta_max
     tr = FLTrainer(task, ds, dep, eta=best_eta, batch_size=batch_size,
-                   payload_dtype=payload_dtype)
+                   payload_dtype=payload_dtype, fault=fault)
     log = tr.run(agg, rounds=rounds, trials=trials, eval_every=eval_every,
                  seed=seed, time_budget_s=time_budget_s, backend=backend,
                  rng=rng)
@@ -268,4 +276,5 @@ def run_cell_scheme(ctx: CellContext, agg):
                         seed=r.seed, time_budget_s=r.time_budget_s,
                         etas=tuple(r.etas), backend=r.backend,
                         batch_size=r.batch_size, rng=r.rng,
-                        payload_dtype=r.payload_dtype)
+                        payload_dtype=r.payload_dtype,
+                        fault=ctx.scenario.fault)

@@ -8,6 +8,13 @@ bucketed by (family, device count, solver) — the batched solvers vmap
 over grid points but require a shared N (``stack_*_specs``) — giving
 exactly one batched solve per scheme family for any fixed-N grid.
 
+Every dotted spec axis sweeps through here generically — including the
+``fault.*`` axes (``fault.dropout_prob``, ``fault.deep_fade_thresh``,
+...): a fault override lands in the cell's content hash like any other
+field, and the cell's design group sees it because
+``CellContext.design_spec`` feeds the solvers the outage-adjusted
+effective channel statistics (``core.faults.effective_lambdas``).
+
 The plan is pure metadata: nothing is materialized or solved until
 ``repro.api.execute.execute``.
 """

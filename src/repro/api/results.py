@@ -33,7 +33,10 @@ import numpy as np
 #: and therefore every content hash, changed layout.
 #: v4: RunSpec gained ``payload_dtype`` (f32|bf16 uplink payloads) — spec
 #: dicts, and therefore every content hash, changed layout again.
-SCHEMA_VERSION = 4
+#: v5: ScenarioSpec gained ``fault`` (``core.faults.FaultSpec`` — wireless
+#: fault injection + graceful-degradation policy), adding a top-level
+#: "fault" block to every spec dict.
+SCHEMA_VERSION = 5
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_RESULTS_ROOT = Path(os.environ.get(
@@ -113,7 +116,7 @@ class CellResult:
     index: int
     cell_hash: str
     overrides: dict               # sweep-axis values applied to the base
-    status: str                   # "computed" | "cached"
+    status: str                   # "computed" | "cached" | "timeout"
     path: Optional[Path]          # cell payload file (None if unsaved)
     payload: dict
 
@@ -159,11 +162,15 @@ class ResultSet:
 
         Cells already on disk at their target path — cache hits, and
         computed cells the executor persisted incrementally — are not
-        re-serialized.
+        re-serialized. Cells without a payload (``status="timeout"``)
+        are recorded in the manifest but get no payload file.
         """
         directory = Path(directory)
         (directory / "cells").mkdir(parents=True, exist_ok=True)
         for c in self.cells:
+            if not c.payload:
+                c.path = None
+                continue
             path = directory / "cells" / f"{c.cell_hash}.json"
             if c.path != path or not path.exists():
                 path.write_text(dump_json(c.payload))
@@ -179,9 +186,12 @@ class ResultSet:
         cells = []
         for entry in manifest["cells"]:
             path = directory / "cells" / f"{entry['cell_hash']}.json"
+            # timeout cells have no payload file; keep the manifest row
+            has_payload = path.exists()
             cells.append(CellResult(
                 index=entry["index"], cell_hash=entry["cell_hash"],
                 overrides=entry.get("overrides", {}),
-                status=entry.get("status", "cached"), path=path,
-                payload=json.loads(path.read_text())))
+                status=entry.get("status", "cached"),
+                path=path if has_payload else None,
+                payload=json.loads(path.read_text()) if has_payload else {}))
         return cls(manifest=manifest, cells=cells, directory=directory)

@@ -9,6 +9,7 @@ pre-refactor trajectories. ``REGISTRY`` backs the CLI
 from __future__ import annotations
 
 from ..core.channel import WirelessConfig
+from ..core.faults import FaultSpec
 from .spec import (DataSpec, DesignPolicy, RunSpec, ScenarioSpec, SweepSpec,
                    TaskSpec)
 
@@ -111,12 +112,46 @@ def sweep_smoke(quick: bool = True) -> SweepSpec:
                            "design.omega_bias_scale": (0.5, 2.0)})
 
 
+def sweep_fault(quick: bool = True, n_devices: int = 10) -> SweepSpec:
+    """Fault injection: outage rate x heterogeneity grid (``core.faults``).
+
+    Sweeps the per-round dropout probability against the path-loss
+    exponent (heterogeneity level), with a deep-fade cutoff active
+    throughout, comparing the proposed biased OTA design — whose solver
+    sees the outage-adjusted effective channel statistics — against the
+    zero-bias Vanilla OTA baseline. The thesis cell-by-cell: biased
+    designs degrade gracefully with rising fault rates where zero-bias
+    aggregation collapses (``benchmarks/sweep_fault.py`` reduces this
+    grid to that figure).
+    """
+    base = ScenarioSpec(
+        name="sweep_fault",
+        data=DataSpec(n_train_per_class=60 if quick else 600,
+                      n_test_per_class=30 if quick else 200,
+                      samples_per_device=60 if quick else 300),
+        wireless=WirelessConfig(n_devices=6 if quick else n_devices, seed=1),
+        design=DesignPolicy(kappa=3.0 if quick else None),
+        run=RunSpec(rounds=8 if quick else 100, trials=1 if quick else 2,
+                    eval_every=4 if quick else 10,
+                    etas=(1.0,) if quick else (1.0, 0.25)),
+        fault=FaultSpec(deep_fade_thresh=1e-6, on_missing="reweight"),
+        schemes=("proposed_ota", "vanilla_ota"))
+    if quick:
+        axes = {"fault.dropout_prob": (0.0, 0.3),
+                "wireless.pl_exponent": (2.2, 2.6)}
+    else:
+        axes = {"fault.dropout_prob": (0.0, 0.2, 0.5),
+                "wireless.pl_exponent": (2.0, 2.2, 2.6)}
+    return SweepSpec(name="sweep_fault", base=base, axes=axes)
+
+
 REGISTRY = {
     "fig2_ota_sc": fig2_ota_sc,
     "fig2_digital_sc": fig2_digital_sc,
     "fig3_nonconvex": fig3_nonconvex,
     "snr_het": snr_het,
     "sweep_smoke": sweep_smoke,
+    "sweep_fault": sweep_fault,
 }
 
 

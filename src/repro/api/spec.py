@@ -13,8 +13,10 @@ A ``SweepSpec`` declares grids over any spec axis by dotted path —
 ``wireless.pl_exponent`` (path-loss heterogeneity),
 ``design.omega_bias_scale``, ``run.batch_size``, ``run.time_budget_s``,
 ``run.rng`` (replay vs fast execution), ``run.payload_dtype`` (f32 vs
-bf16 uplink payloads), ... — and expands to the cross
-product of override-applied scenarios
+bf16 uplink payloads), ``fault.dropout_prob`` / ``fault.deep_fade_thresh``
+/ ``fault.erasure_prob`` / ``fault.straggler_prob`` / ``fault.deadline_s``
+(wireless fault injection, ``core.faults``), ... — and expands to the
+cross product of override-applied scenarios
 (``points()``).
 """
 from __future__ import annotations
@@ -26,6 +28,7 @@ import json
 from typing import Optional
 
 from ..core.channel import WirelessConfig
+from ..core.faults import FaultSpec
 from .results import SCHEMA_VERSION, json_default
 
 
@@ -109,6 +112,7 @@ class ScenarioSpec:
     wireless: WirelessConfig = WirelessConfig()
     design: DesignPolicy = DesignPolicy()
     run: RunSpec = RunSpec()
+    fault: FaultSpec = FaultSpec()       # wireless fault injection (off)
     schemes: tuple = ("suite:fig2_ota",)
 
     @property
@@ -131,6 +135,8 @@ class ScenarioSpec:
             wireless=WirelessConfig(**d["wireless"]),
             design=DesignPolicy(**d["design"]),
             run=RunSpec(**run),
+            # pre-v5 dicts have no "fault" key: default to disabled
+            fault=FaultSpec(**d["fault"]) if d.get("fault") else FaultSpec(),
             schemes=tuple(d["schemes"]))
 
     def replace(self, **kw) -> "ScenarioSpec":

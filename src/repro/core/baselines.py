@@ -39,7 +39,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .channel import Deployment
-from .digital import DigitalParams, digital_round
+from .digital import DigitalParams, digital_round, outage_mask
 from .ota import OTAParams, ota_round, uniform_gamma_min_variance
 from .quantize import payload_bits, quantize_np, quantize_np_dither
 
@@ -511,9 +511,10 @@ class FedTOE(_DigitalBase):
         latency = 0.0
         chi = np.zeros(n)
         k_sched = max(len(bits), 1)
+        no_outage = outage_mask(habs, self.thr)
         for m in bits:
             latency += payload_bits(self.dim, bits[m]) / (self.B * max(self.rates[m], 1e-9))
-            if habs[m] >= self.thr[m]:        # no outage
+            if no_outage[m]:
                 g64 = np.asarray(grads[m], dtype=np.float64)
                 gq = (quantize_np(g64, bits[m], rng) if dither is None
                       else quantize_np_dither(g64, bits[m], dither[m]))

@@ -32,6 +32,34 @@ def bias_sum(p: np.ndarray) -> float:
     return float(np.sum((p - 1.0 / n) ** 2))
 
 
+def effective_participation(p: np.ndarray, q: np.ndarray,
+                            on_missing: str = "reweight") -> np.ndarray:
+    """Participation levels under the fault layer, per degradation policy.
+
+    ``p`` are the designed participation levels (E[chi]/nu), ``q`` the
+    per-device round-survival probabilities
+    (``core.faults.survival_prob``). The Theorem-1/2 bias term prices the
+    fault-induced participation shift by evaluating :func:`bias_sum` on
+    the *effective* levels returned here:
+
+      * ``"reweight"`` — inverse-propensity weighting restores the mean:
+        effective participation is ``p`` (faults add variance, not bias).
+      * ``"zero"`` — missing payloads are zero-filled, shrinking device m
+        by its survival rate: ``p * q`` — the priced outage bias.
+      * ``"stale"`` — the last received gradient stands in, so the
+        participation *level* stays ``p``; the staleness of the gradient
+        itself is a time-correlated bias outside the bound's model (see
+        ``core.faults`` — the empirical comparison point).
+    """
+    p = np.asarray(p, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    if on_missing == "zero":
+        return p * q
+    if on_missing in ("reweight", "stale"):
+        return p.copy()
+    raise ValueError(f"unknown on_missing policy {on_missing!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class ObjectiveWeights:
     """(omega_var, omega_bias) per Sec. IV footnote 4."""

@@ -140,6 +140,10 @@ class FadingProcess:
 
 
 def participation_probability(threshold: np.ndarray, lambdas: np.ndarray) -> np.ndarray:
-    """P(|h_m| >= threshold_m) = exp(-threshold^2/Lambda) under Rayleigh fading."""
+    """P(|h_m| >= threshold_m) = exp(-threshold^2/Lambda) under Rayleigh fading.
+
+    Shared by the digital design statistics (eq. (9) thresholds) and the
+    fault layer's deep-fade survival term (``core.faults.survival_prob``).
+    """
     thr = np.asarray(threshold, dtype=np.float64)
     return np.exp(-(thr ** 2) / np.asarray(lambdas, dtype=np.float64))

@@ -5,7 +5,10 @@ Uplink model (eq. (9)-(12)):
     device m transmits its dithered-quantized gradient (r_m bits/entry,
     payload L_m = 64 + d r_m) at fixed spectral efficiency
         R_m = log2(1 + E_s rho_m^2 / N0)   [bits/s/Hz]
-    (outage-free by the threshold rule); uplink latency L_m/(B R_m).
+    (outage-free by the threshold rule — unless the fault layer injects
+    deep fades below ``core.faults.FaultSpec.deep_fade_thresh``; both the
+    in-allocation rule and injected outages evaluate through the single
+    :func:`outage_mask` primitive); uplink latency L_m/(B R_m).
     ghat_t = sum_m chi^D_{m,t} g^q_{m,t} / nu_m        (eq. (10))
 
 Statistics:
@@ -24,6 +27,21 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .quantize import payload_bits, quantize_np, quantize_np_dither
+
+
+def outage_mask(habs, thr, deep_fade_thresh: float = 0.0):
+    """The one threshold rule: 1{ |h| >= max(thr, deep_fade_thresh) }.
+
+    Every "no outage" comparison — the digital in-allocation rule eq. (9)
+    and the fault layer's injected deep fades — routes through this
+    primitive so the two masks compose in one place. ``thr`` and
+    ``deep_fade_thresh`` are static (numpy/Python) values; ``habs`` may be
+    a numpy array (oracle) or a traced jnp array (engine scan), and the
+    comparison dispatches accordingly. With ``deep_fade_thresh=0`` the
+    effective threshold is exactly ``thr`` (thresholds are nonnegative),
+    preserving bit-identical pre-fault behavior.
+    """
+    return habs >= np.maximum(thr, deep_fade_thresh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +115,7 @@ def digital_round(params: DigitalParams, grads: Sequence[np.ndarray],
     devices of L_m/(B R_m), TDMA).
     """
     d = params.dim
-    chi = (np.abs(h) >= params.rhos).astype(np.float64)
+    chi = outage_mask(np.abs(h), params.rhos).astype(np.float64)
     acc = np.zeros(d, dtype=np.float64)
     rates = np.maximum(params.rates(), 1e-12)
     payloads = params.payloads()
@@ -139,7 +157,7 @@ def digital_round_jax(params: DigitalParams, grads, h, u,
 
     from ..kernels import ops
 
-    chi = (jnp.abs(h) >= jnp.asarray(params.rhos)).astype(grads.dtype)
+    chi = outage_mask(jnp.abs(h), params.rhos).astype(grads.dtype)
     rates = np.maximum(params.rates(), 1e-12)
     lat_m = jnp.asarray(params.payloads() / (params.bandwidth_hz * rates))
     levels = (2.0 ** params.r_bits.astype(np.float64) - 1.0)

@@ -36,6 +36,13 @@ tiny (O(N) per round) and the engine replays them offline with
 :func:`replay_rounds`, feeding the raw draws into the scan as small
 ``(T, S)`` inputs.
 
+Fault injection (``core.faults``) draws one (3, N) uniform block per round
+from its own counter-based stream (FAULT_TAG, :func:`fault_block` /
+:func:`fault_block_np`). Like dither and batch indices — and unlike the
+fast-mode-only tags below — the fault stream is counter-based in *both*
+rng modes, so injected outages/erasures/stragglers are bit-identical
+across rng="replay"/"fast" and across the NumPy/JAX backends.
+
 Fast mode (``FLTrainer.run(..., rng="fast")``) extends the counter-based
 design to *every* stream: PS AWGN (:func:`noise_block`, NOISE_TAG),
 Rayleigh fading (FADING_TAG, sampled by ``channel.sample_fading_jax``)
@@ -68,6 +75,12 @@ BATCH_TAG = 29
 NOISE_TAG = 41    # PS AWGN z01 draws
 FADING_TAG = 43   # Rayleigh fading (consumed via channel.sample_fading_jax)
 SELECT_TAG = 47   # device-selection draws (per-port sel_stream_jax)
+
+#: Fault-injection stream (``core.faults``): dropout / erasure / straggler
+#: uniforms. Counter-based in BOTH rng modes (like dither and batch), so
+#: fault realizations are bit-identical across rng="replay"/"fast" and
+#: across the NumPy/JAX backends.
+FAULT_TAG = 53
 
 
 def stream_base_key(seed: int, trial: int, tag: int) -> jax.Array:
@@ -127,6 +140,42 @@ def dither_block_np(seed: int, trial: int, t: int, n: int, d: int,
             _key_cache.clear()
         key = _key_cache[ck] = dither_base_key(seed, trial)
     return np.asarray(dither_block(key, t, n, d), dtype=np.float64)
+
+
+def fault_base_key(seed: int, trial: int) -> jax.Array:
+    """Per-trial base key for the fault-injection stream (threefry)."""
+    return stream_base_key(seed, trial, FAULT_TAG)
+
+
+def fault_block(key: jax.Array, t, n: int) -> jnp.ndarray:
+    """(3, n) float32 fault uniforms for round ``t`` (jit/scan-traceable).
+
+    Row 0 drives dropouts, row 1 erasures, row 2 stragglers
+    (``core.faults.fault_masks``). ``key`` is the trial's
+    :func:`fault_base_key`; ``t`` may be a traced scalar, so the engine
+    folds the round index inside ``lax.scan``. Drawn in float32; both
+    consumers widen to float64 (exact, the dither-block pattern) so they
+    compare the identical value against the float64 fault probabilities.
+    """
+    return jax.random.uniform(jax.random.fold_in(key, t), (3, n),
+                              dtype=jnp.float32)
+
+
+def fault_block_np(seed: int, trial: int, t: int, n: int,
+                   _key_cache: dict = {}) -> np.ndarray:
+    """Oracle view of :func:`fault_block`: (3, n) float64 numpy array.
+
+    The base key is memoized per (seed, trial) so the per-round cost in
+    the Python training loop is one fold_in + uniform dispatch (the
+    dither-block pattern).
+    """
+    ck = (int(seed), int(trial))
+    key = _key_cache.get(ck)
+    if key is None:
+        if len(_key_cache) > 256:
+            _key_cache.clear()
+        key = _key_cache[ck] = fault_base_key(seed, trial)
+    return np.asarray(fault_block(key, t, n), dtype=np.float64)
 
 
 def batch_base_key(seed: int, trial: int) -> jax.Array:

@@ -53,6 +53,16 @@ rounds (``tests/test_engine_parity.py``):
     ``device_grads_at_fn`` — the exact compiled program the NumPy trainer
     calls on the same indices, so stochastic gradients are bit-identical.
 
+Fault injection (``core.faults.FaultSpec``) runs in-scan too: one (3, N)
+counter-based uniform block per round (FAULT_TAG — bit-identical across
+both rng modes and both backends) drives dropout/erasure/straggler masks,
+deep fades evaluate through ``digital.outage_mask``, and the
+``on_missing`` degradation policy (reweight/zero/stale) transforms the
+gradient payloads *before* the scheme's ``round_fn`` so every registered
+port inherits it; "stale" carries the last received (N, d) gradients in
+the scan carry. With faults disabled the scan traces the exact pre-fault
+program — disabled-fault runs are bit-identical to a fault-free build.
+
 Time budgets run in-scan: cumulative wall-clock rides in the scan carry,
 every round is masked by ``t_wall < budget`` (``jnp.where``), and each eval
 segment reports the last *live* model state — replicating the trainer's
@@ -83,7 +93,8 @@ from ..core import baselines as B
 from ..core import rngstream
 from ..core.channel import Deployment, sample_fading_batch, sample_fading_jax
 from ..core.digital import (capacity_rate_jnp, digital_round_jax,
-                            greedy_bit_alloc_jax, topk_mask)
+                            greedy_bit_alloc_jax, outage_mask, topk_mask)
+from ..core.faults import FaultSpec, fault_masks, survival_prob
 from ..core.ota import bbfl_round_jax, opc_ota_fl_round_jax, ota_round_jax
 from ..core.quantize import payload_bits
 from ..kernels import ops
@@ -454,7 +465,7 @@ def _fedtoe(agg: "B.FedTOE", use_kernel: bool) -> JaxAggregator:
             bandwidth_hz=bw, t_budget_s=t_budget, r_max=r_max)
         lat = jnp.sum(in_alloc * (64.0 + dim * bits)
                       / (bw * jnp.maximum(rates, 1e-9)))
-        chi = (in_alloc * (jnp.abs(h) >= thr)).astype(grads.dtype)  # no outage
+        chi = (in_alloc * outage_mask(jnp.abs(h), thr)).astype(grads.dtype)
         k_sched = jnp.maximum(jnp.sum(in_alloc), 1.0)
         acc = _quantized_mean(grads, chi, chi * bits, u,
                               k_sched * (1.0 - p_out), use_kernel,
@@ -512,7 +523,8 @@ class FLEngine:
                  project_radius: Optional[float] = None,
                  batch_size: Optional[int] = None,
                  use_kernel: bool = True, shard_trials: bool = False,
-                 payload_dtype: str = "f32"):
+                 payload_dtype: str = "f32",
+                 fault: Optional[FaultSpec] = None):
         if payload_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
@@ -524,6 +536,9 @@ class FLEngine:
         self.use_kernel = use_kernel
         self.shard_trials = shard_trials
         self.payload_dtype = payload_dtype
+        # a disabled FaultSpec normalizes to None: the scan traces the
+        # exact pre-fault program, so disabled-fault runs are bit-identical
+        self.fault = fault if fault is not None and fault.enabled else None
         sizes = tuple(len(d) for d in dataset.devices)
         if len(set(sizes)) == 1:
             self.device_sizes = None      # equal sizes: plain stacked arrays
@@ -594,7 +609,7 @@ class FLEngine:
         key = (self.task, trials, n_seg, eval_every, d, N,
                self.xs.shape, self.batch_size, self.device_sizes,
                self.use_kernel, self.shard_trials, rng_mode,
-               self.payload_dtype)
+               self.payload_dtype, self.fault)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
@@ -631,10 +646,23 @@ class FLEngine:
         has_sel = jagg.sel_stream_np is not None
         fast = rng_mode == "fast"
         lambdas = jnp.asarray(self.dep.lambdas, jnp.float64)
+        # fault layer: trace-time static — with faults disabled (None) the
+        # scan below is the exact pre-fault program (bit-identical runs)
+        fault = self.fault
+        stale = fault is not None and fault.on_missing == "stale"
+        if fault is not None:
+            q_surv = jnp.asarray(
+                survival_prob(fault, np.asarray(self.dep.lambdas)),
+                jnp.float64)
+            has_deadline = fault.deadline_s is not None
+            deadline = float(fault.deadline_s) if has_deadline else np.inf
+            straggler_mult = float(fault.straggler_mult)
 
         def trial_fn(w0, eta, radius, lat_div, budget, xs, ys, dkey, bkey,
-                     A, B_, C, Ts):
-            # dkey/bkey: scan-carried per-trial dither / batch-index keys.
+                     fkey, A, B_, C, Ts):
+            # dkey/bkey/fkey: scan-carried / closed-over per-trial dither,
+            # batch-index and fault-stream keys (counter-based in both
+            # modes).
             # replay: A=H (n_seg, eval_every, N) complex, B_=Z
             # (n_seg, eval_every, dz), C=SEL (n_seg, eval_every, S) — host
             # precomputed tensors fed through the scan.
@@ -644,7 +672,12 @@ class FLEngine:
             # scan input. Same arity either way, so the vmap/shard_map
             # plumbing below is mode-blind.
             def step(carry, inp):
-                w, t_wall, _, dkey, bkey = carry
+                if stale:
+                    # "stale" carries the last *received* per-device
+                    # gradients so missing payloads replay them
+                    w, t_wall, _, dkey, bkey, g_stale = carry
+                else:
+                    w, t_wall, _, dkey, bkey = carry
                 if fast:
                     t = inp
                     h = sample_fading_jax(A, t, lambdas)
@@ -686,6 +719,22 @@ class FLEngine:
                     # the device truncated to bf16; aggregation stays in
                     # the engine's wide accumulators
                     g = g.astype(jnp.bfloat16).astype(jnp.float64)
+                if fault is not None:
+                    # counter-based fault draws + degradation policy,
+                    # applied to the payloads *upstream* of the scheme's
+                    # combiner so every registered port inherits it
+                    # (faulted devices keep their reserved slots; a zeroed
+                    # payload quantizes to exact zeros on both backends)
+                    uf = rngstream.fault_block(fkey, t, N)
+                    uf = uf.astype(jnp.float64)   # exact widen (x64 on)
+                    okb, straggler = fault_masks(uf, jnp.abs(h), fault)
+                    if fault.on_missing == "zero":
+                        g = g * okb.astype(jnp.float64)[:, None]
+                    elif fault.on_missing == "reweight":
+                        g = g * (okb.astype(jnp.float64) / q_surv)[:, None]
+                    else:       # stale: replay the last received gradient
+                        g = jnp.where(okb[:, None], g, g_stale)
+                        g_stale = g
                 if needs_dither:
                     # one (N, d) block regenerated per round — the whole
                     # dither stream never exists in memory at once
@@ -697,13 +746,25 @@ class FLEngine:
                 # bit-equal to the trainer's ``latency_s / bandwidth`` and
                 # budget comparisons freeze on the same round
                 w_new = jnp.where(active, _project(w - eta * ghat, radius), w)
-                t_wall = jnp.where(active, t_wall + lat / lat_div, t_wall)
-                return (w_new, t_wall, active, dkey, bkey), None
+                if fault is not None:
+                    # delivering stragglers stretch the round; a deadline
+                    # instead caps it (stragglers then miss via the mask)
+                    lat_s = lat / lat_div
+                    slow = jnp.any(straggler & okb)
+                    lat_s = jnp.where(slow, lat_s * straggler_mult, lat_s)
+                    if has_deadline:
+                        lat_s = jnp.minimum(lat_s, deadline)
+                    t_wall = jnp.where(active, t_wall + lat_s, t_wall)
+                else:
+                    t_wall = jnp.where(active, t_wall + lat / lat_div,
+                                       t_wall)
+                out = (w_new, t_wall, active, dkey, bkey)
+                return (out + (g_stale,) if stale else out), None
 
             def segment(carry, seg_inp):
                 w_eval, inner = carry[0], carry[1:]
                 inner, _ = jax.lax.scan(step, inner, seg_inp)
-                (w, t_wall, live, _, _) = inner
+                w, t_wall, live = inner[0], inner[1], inner[2]
                 # the eval at this segment's end is written by the trainer
                 # iff the segment's last round still ran; otherwise the slot
                 # freezes at the last written eval state
@@ -712,6 +773,9 @@ class FLEngine:
 
             carry0 = (w0, w0, jnp.zeros((), jnp.float64),
                       jnp.asarray(True), dkey, bkey)
+            if stale:
+                # until a device's first delivery, "stale" replays zeros
+                carry0 = carry0 + (jnp.zeros((N, d), jnp.float64),)
             seg_xs = Ts if fast else (A, B_, C, Ts)
             _, (ws, walls) = jax.lax.scan(segment, carry0, seg_xs)
             ws = jnp.concatenate([w0[None], ws], axis=0)          # (E, d)
@@ -721,7 +785,7 @@ class FLEngine:
         vmapped = jax.vmap(
             trial_fn,
             in_axes=(None, None, None, None, None, None, None,
-                     0, 0, 0, 0, 0, None))
+                     0, 0, 0, 0, 0, 0, None))
         if self.shard_trials:
             from ..compat import shard_map as shard_map_compat
             n_hw = len(jax.devices())
@@ -735,7 +799,7 @@ class FLEngine:
                 vmapped, mesh,
                 in_specs=(P(), P(), P(), P(), P(), P(), P(),
                           P("trials"), P("trials"), P("trials"), P("trials"),
-                          P("trials"), P()),
+                          P("trials"), P("trials"), P()),
                 out_specs=(P("trials"), P("trials")),
                 manual_axes=("trials",))
         runner = jax.jit(vmapped)
@@ -789,6 +853,11 @@ class FLEngine:
                           for tr in range(trials)])
         bkeys = jnp.stack([rngstream.batch_base_key(seed, tr)
                            for tr in range(trials)])
+        # fault-stream base keys ride along unconditionally (cheap, and
+        # keeps trial_fn's arity mode- and fault-blind); with faults
+        # disabled the traced program never consumes them
+        fkeys = jnp.stack([rngstream.fault_base_key(seed, tr)
+                           for tr in range(trials)])
 
         with enable_x64():
             runner = self._get_runner(jagg, trials, n_seg, eval_every, rng)
@@ -812,7 +881,7 @@ class FLEngine:
                 A, B_, C = seg(H), seg(Z), seg(SEL)
             ws, walls = runner(w0, eta, radius, lat_div, budget,
                                jnp.asarray(self.xs), jnp.asarray(self.ys),
-                               keys, bkeys, A, B_, C, Ts)
+                               keys, bkeys, fkeys, A, B_, C, Ts)
             losses, accs = self._evaluate(ws)
             opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
                        if w_star is not None else None)

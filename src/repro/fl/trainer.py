@@ -8,7 +8,11 @@ Matches Sec. V's protocol:
     mini-batches via ``batch_size`` (counter-based index draws shared
     bit-for-bit with the JAX engine),
   * projection onto the ball W = {||w|| <= D/2} in the strongly convex case,
-  * per-round latency accounting (OTA: d/B; digital: realized TDMA time).
+  * per-round latency accounting (OTA: d/B; digital: realized TDMA time),
+  * optional wireless fault injection (``core.faults``): dropouts, erasures,
+    deep fades and stragglers drawn from the counter-based FAULT stream
+    (bit-shared with the JAX engine), with graceful-degradation policies
+    applied to the gradients before the aggregation scheme runs.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import numpy as np
 from ..core import rngstream
 from ..core.baselines import Aggregator
 from ..core.channel import Deployment, FadingProcess
+from ..core.faults import FaultSpec, fault_masks, survival_prob
 
 
 @dataclasses.dataclass
@@ -44,7 +49,8 @@ class FLTrainer:
     def __init__(self, task, dataset, deployment: Deployment,
                  eta: float, *, project_radius: Optional[float] = None,
                  batch_size: Optional[int] = None,
-                 payload_dtype: str = "f32"):
+                 payload_dtype: str = "f32",
+                 fault: Optional[FaultSpec] = None):
         if payload_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
@@ -55,6 +61,10 @@ class FLTrainer:
         self.project_radius = project_radius
         self.batch_size = batch_size
         self.payload_dtype = payload_dtype
+        # a disabled FaultSpec normalizes to None so fault-free runs take
+        # the exact pre-fault code path (bit-identical trajectories) and
+        # hit the same engine cache entry as a no-fault trainer
+        self.fault = fault if fault is not None and fault.enabled else None
         self._engine = None
         # stack device data once whenever sizes allow: (N, n, feat). The
         # stacked view serves the full-batch path AND the counter-based
@@ -136,11 +146,13 @@ class FLTrainer:
                         or self._engine.eta != self.eta
                         or self._engine.project_radius != self.project_radius
                         or self._engine.batch_size != bs
-                        or self._engine.payload_dtype != self.payload_dtype):
+                        or self._engine.payload_dtype != self.payload_dtype
+                        or self._engine.fault != self.fault):
                     self._engine = FLEngine(
                         self.task, self.ds, self.dep, self.eta,
                         project_radius=self.project_radius,
-                        batch_size=bs, payload_dtype=self.payload_dtype)
+                        batch_size=bs, payload_dtype=self.payload_dtype,
+                        fault=self.fault)
                 return self._engine.run(aggregator, rounds=rounds,
                                         trials=trials, eval_every=eval_every,
                                         seed=seed, w_star=w_star,
@@ -167,10 +179,19 @@ class FLTrainer:
         wall = np.zeros((trials, len(eval_rounds)))
         x_all = np.concatenate([d.x for d in self.ds.devices])
         y_all = np.concatenate([d.y for d in self.ds.devices])
+        # fault layer (counter-based FAULT stream, shared bit-for-bit with
+        # the JAX engine); q/deadline are static per-run quantities
+        fault = self.fault
+        if fault is not None:
+            q_surv = survival_prob(fault, self.dep.lambdas)
+            straggler_mult = float(fault.straggler_mult)
+            deadline = fault.deadline_s
 
         for trial in range(trials):
             rng = np.random.default_rng((seed, trial, 17))
             fading = FadingProcess(self.dep, seed=seed * 1000 + trial)
+            if fault is not None and fault.on_missing == "stale":
+                g_stale = np.zeros((self.dep.n_devices, self.task.dim))
             w = self.task.init_params()
             t_wall, ei = 0.0, 0
             for t in range(rounds + 1):
@@ -234,6 +255,22 @@ class FLTrainer:
                                                     y_b[None])[0]
                              for x_b, y_b in zip(bx, by)])
                 h = fading.sample(t)
+                # graceful degradation: transform the gradients BEFORE the
+                # aggregation scheme sees them (same ordering as the engine
+                # scan: payload cast -> fault policy -> dither), so every
+                # scheme inherits the policy without per-scheme code
+                if fault is not None:
+                    uf = rngstream.fault_block_np(seed, trial, t,
+                                                  self.dep.n_devices)
+                    okb, straggler = fault_masks(uf, np.abs(h), fault)
+                    if fault.on_missing == "zero":
+                        grads = grads * okb.astype(np.float64)[:, None]
+                    elif fault.on_missing == "reweight":
+                        grads = grads * (okb.astype(np.float64)
+                                         / q_surv)[:, None]
+                    else:       # stale: replay the last received gradient
+                        grads = np.where(okb[:, None], grads, g_stale)
+                        g_stale = grads
                 # digital schemes consume counter-based dither (one (N, d)
                 # block per round, bit-replayable by the JAX engine); OTA
                 # schemes only draw AWGN from the sequential trial rng
@@ -248,10 +285,17 @@ class FLTrainer:
                                                     self.task.dim)
                     res = aggregator.round(list(grads), h, t, rng,
                                            dither=u_t)
-                if aggregator.is_ota:
-                    t_wall += res.latency_s / self.dep.cfg.bandwidth_hz
-                else:
-                    t_wall += res.latency_s
+                lat_s = (res.latency_s / self.dep.cfg.bandwidth_hz
+                         if aggregator.is_ota else res.latency_s)
+                if fault is not None:
+                    # delivering stragglers stretch the round; a deadline
+                    # instead caps it (stragglers then count as missing,
+                    # see core.faults.fault_masks)
+                    if bool(np.any(straggler & okb)):
+                        lat_s = lat_s * straggler_mult
+                    if deadline is not None:
+                        lat_s = min(lat_s, float(deadline))
+                t_wall += lat_s
                 w = self._project(w - self.eta * res.ghat)
         return TrainLog(scheme=aggregator.name,
                         rounds=np.asarray(eval_rounds, dtype=np.int64),

@@ -6,7 +6,11 @@ serial run (modulo wall-clock timings), cached re-runs stay no-ops
 without spawning anything, a half-finished sweep resumes from the cells
 that completed — including when the unfinished half died inside a
 worker — and the dependency-ordered schedule keeps every design-group
-solve ahead of its dependent cells.
+solve ahead of its dependent cells. The supervisor hardening rides the
+same contracts: a SIGKILLed worker's cell is requeued and the manifest
+still matches serial; a hung cell surfaces as ``status="timeout"``
+instead of wedging the sweep; a corrupt cache cell is quarantined to
+``<hash>.json.bad`` and recomputed.
 
 (These tests live in a real file on purpose: the pool uses the spawn
 start method, which re-imports ``__main__`` in each worker.)
@@ -124,6 +128,85 @@ def test_worker_failure_is_collected_and_resumable(tmp_path):
 def test_jobs_validation(tmp_path):
     with pytest.raises(ValueError, match="jobs"):
         execute(_tiny(), out_dir=tmp_path / "rs", jobs=0)
+    with pytest.raises(ValueError, match="retries"):
+        execute(_tiny(), out_dir=tmp_path / "rs", retries=-1)
+    with pytest.raises(ValueError, match="cell_timeout_s"):
+        execute(_tiny(), out_dir=tmp_path / "rs", cell_timeout_s=0.0)
+
+
+def test_chaos_worker_kill_is_recovered(tmp_path, monkeypatch):
+    """SIGKILL one worker mid-cell (env-gated chaos hook, fires exactly
+    once): the supervisor requeues the cell on a fresh worker and the
+    sweep completes with a manifest identical to the serial run."""
+    sweep = _grid()
+    rs_ser = execute(sweep, out_dir=tmp_path / "serial")
+    kill_dir = tmp_path / "chaos"
+    kill_dir.mkdir()
+    monkeypatch.setenv("REPRO_CHAOS_KILL_DIR", str(kill_dir))
+    rs_par = execute(sweep, out_dir=tmp_path / "par", jobs=2)
+    assert (kill_dir / "killed").exists(), "chaos hook never fired"
+    assert [c.status for c in rs_par] == ["computed"] * 4
+    assert _strip(rs_par.manifest) == _strip(rs_ser.manifest)
+    for cs, cp in zip(rs_ser, rs_par):
+        assert _strip(cp.payload) == _strip(cs.payload)
+
+
+def test_chaos_worker_crash_exhausts_retries_and_raises(tmp_path,
+                                                        monkeypatch):
+    """With retries=0, a killed worker's cell has no second chance: the
+    sweep raises (crash != timeout — losing a worker with retries
+    exhausted is an error, not a quietly missing cell)."""
+    kill_dir = tmp_path / "chaos"
+    kill_dir.mkdir()
+    monkeypatch.setenv("REPRO_CHAOS_KILL_DIR", str(kill_dir))
+    with pytest.raises(RuntimeError, match="failed in workers"):
+        execute(_tiny(), out_dir=tmp_path / "rs", jobs=2, retries=0)
+
+
+def test_chaos_hung_cell_times_out_not_hangs(tmp_path, monkeypatch):
+    """A cell that never returns surfaces as status="timeout" (empty
+    payload, no cells/<hash>.json, no exception) instead of wedging the
+    sweep; the other cell of the grid still completes."""
+    base = _tiny(schemes=("vanilla_ota",))
+    sweep = SweepSpec(name="par_hang", base=base,
+                      axes={"wireless.tx_power_dbm": (-3.0, 3.0)})
+    hang_hash = plan(sweep).cells[0].cell_hash
+    monkeypatch.setenv("REPRO_CHAOS_HANG_HASH", hang_hash)
+    out = tmp_path / "rs"
+    rs = execute(sweep, out_dir=out, jobs=2, cell_timeout_s=1.5, retries=0)
+    by_hash = {c.cell_hash: c for c in rs}
+    hung = by_hash[hang_hash]
+    assert hung.status == "timeout" and hung.payload == {}
+    assert hung.path is None
+    assert not (out / "cells" / f"{hang_hash}.json").exists()
+    others = [c for c in rs if c.cell_hash != hang_hash]
+    assert [c.status for c in others] == ["computed"]
+    manifest = json.loads((out / "manifest.json").read_text())
+    row = next(r for r in manifest["cells"] if r["cell_hash"] == hang_hash)
+    assert row["status"] == "timeout" and row["elapsed_s"] is None
+    # the timed-out cell is not cached: a clean re-run computes it
+    monkeypatch.delenv("REPRO_CHAOS_HANG_HASH")
+    rs2 = execute(sweep, out_dir=out, jobs=2)
+    assert {c.cell_hash: c.status for c in rs2} == {
+        hang_hash: "computed", others[0].cell_hash: "cached"}
+
+
+def test_corrupt_cache_cell_is_quarantined_and_recomputed(tmp_path):
+    """A truncated/corrupt cells/<hash>.json must not poison the sweep:
+    it is moved to <hash>.json.bad and the cell recomputes."""
+    out = tmp_path / "rs"
+    rs = execute(_tiny(), out_dir=out)
+    cell = rs.cells[0]
+    path = out / "cells" / f"{cell.cell_hash}.json"
+    path.write_text('{"schema_version": 5, "truncated')
+    rs2 = execute(_tiny(), out_dir=out)
+    assert rs2.cells[0].status == "computed"
+    bad = out / "cells" / f"{cell.cell_hash}.json.bad"
+    assert bad.exists()
+    assert bad.read_text().startswith('{"schema_version": 5, "truncated')
+    # the fresh artifact is valid JSON again and a re-run is a cache hit
+    json.loads(path.read_text())
+    assert execute(_tiny(), out_dir=out).cells[0].status == "cached"
 
 
 def test_schedule_orders_designs_before_dependent_cells():
