@@ -263,6 +263,9 @@ def run_scale(quick: bool = True, *, n_grid=None, rounds: int = 30,
        carries three (2,)-uint32 keys per trial. Non-designed OTA
        schemes (VanillaOTA / OPC-OTA-FL) so the grid never waits on an
        N=1024 design solve nor on the interpret-mode quantize kernel.
+       A population-scale partial-participation cell (N=2000 devices,
+       expected cohort S=64 via ``core.participation``) rides along as
+       ``participation_scale`` — the scenario the 2 GB RSS guard covers.
     2. **fig2-scale replay-vs-fast** — the same fig2-sized workload
        (N=20, d=7850) end-to-end in both modes; the recorded
        ``speedup_fast`` is the perf trajectory tracked across PRs. On
@@ -318,6 +321,39 @@ def run_scale(quick: bool = True, *, n_grid=None, rounds: int = 30,
             })
         del trainer, task, ds, dep
 
+    # population-scale partial participation: N=2000 devices, an expected
+    # cohort of S=64 per round (core.participation), fast counter streams
+    # — the cell the 2 GB RSS guard covers. The participation mask is a
+    # trace-time-static (N,) Bernoulli draw + scale inside the scan, so
+    # its memory footprint stays O(N) regardless of rounds/trials.
+    part_n, part_s = 2000, 64
+    task, ds, dep, eta_max = make_sc_setup(
+        part_n, samples_per_device=20,
+        n_train_per_class=max((part_n * 20) // 10, 200))
+    cfg = dep.cfg
+    agg = B.VanillaOTA(task.dim, task.g_max, cfg.energy_per_symbol,
+                       cfg.noise_power)
+    trainer = FLTrainer(task, ds, dep, eta=0.25 * eta_max,
+                        clients_per_round=part_s)
+    t_cold, _ = _time_backend(trainer, agg, "jax", rounds=rounds,
+                              trials=trials, eval_every=eval_every,
+                              seed=5, rng="fast")
+    t_warm, log = _time_backend(trainer, agg, "jax", rounds=rounds,
+                                trials=trials, eval_every=eval_every,
+                                seed=5, rng="fast")
+    participation_scale = {
+        "scheme": agg.name, "key": "vanilla_ota",
+        "n_devices": part_n, "clients_per_round": part_s,
+        "participation": "uniform", "dim": task.dim,
+        "samples_per_device": 20, "rounds": rounds, "trials": trials,
+        "jax_cold_s": t_cold, "jax_warm_s": t_warm,
+        "rounds_per_s": rounds * trials / t_warm,
+        "final_loss": float(log.global_loss[:, -1].mean()),
+        "peak_rss_mb":
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+    }
+    del trainer, task, ds, dep
+
     # fig2-scale end-to-end: replay's per-trial host precompute + transfer
     # vs fast's in-scan streams, same scheme, same horizon
     task, ds, dep, eta_max = make_sc_setup(20, samples_per_device=1000,
@@ -338,6 +374,7 @@ def run_scale(quick: bool = True, *, n_grid=None, rounds: int = 30,
         "engine_bench_scale", quick=quick,
         scale={"samples_per_device": samples_per_device,
                "n_grid": list(n_grid), "results": scale_results},
+        participation_scale=participation_scale,
         fig2_speedup={
             "scheme": agg.name, "n_devices": 20, "dim": task.dim,
             "rounds": fig2_rounds, "trials": fig2_trials,
@@ -353,6 +390,12 @@ def run_scale(quick: bool = True, *, n_grid=None, rounds: int = 30,
              r["jax_warm_s"] * 1e6 / max(rounds * trials, 1),
              f"rps={r['rounds_per_s']:.0f};rss={r['peak_rss_mb']:.0f}MB")
             for r in scale_results]
+    ps = participation_scale
+    rows.append((f"engine_bench_scale/N{ps['n_devices']}"
+                 f"_S{ps['clients_per_round']}/participation",
+                 ps["jax_warm_s"] * 1e6 / max(rounds * trials, 1),
+                 f"rps={ps['rounds_per_s']:.0f};"
+                 f"rss={ps['peak_rss_mb']:.0f}MB"))
     return rows, payload
 
 
@@ -387,6 +430,12 @@ def main() -> None:
                   f"{r['trials']} rounds in {r['jax_warm_s']:.2f}s warm "
                   f"({r['rounds_per_s']:.0f} rounds/s, "
                   f"RSS {r['peak_rss_mb']:.0f} MB)")
+        ps = payload["participation_scale"]
+        print(f"N={ps['n_devices']} S={ps['clients_per_round']} "
+              f"partial participation ({ps['key']}): {ps['rounds']}x"
+              f"{ps['trials']} rounds in {ps['jax_warm_s']:.2f}s warm "
+              f"({ps['rounds_per_s']:.0f} rounds/s, "
+              f"RSS {ps['peak_rss_mb']:.0f} MB)")
         f2 = payload["fig2_speedup"]
         print(f"fig2-scale ({f2['scheme']}, {f2['rounds']}x{f2['trials']}): "
               f"replay {f2['replay_warm_s']:.2f}s vs fast "

@@ -21,7 +21,8 @@ import types
 def _registry() -> dict:
     from . import (fig2_ota_sc, fig2_digital_sc, fig3_nonconvex, roofline,
                    kernel_bench, theorem_validation, engine_bench,
-                   design_bench, sweep_snr_het, sweep_fault)
+                   design_bench, sweep_snr_het, sweep_fault,
+                   sweep_participation)
     return {
         "kernel_bench": kernel_bench,
         "roofline": roofline,
@@ -48,6 +49,7 @@ def _registry() -> dict:
         "fig3_nonconvex": fig3_nonconvex,
         "sweep_snr_het": sweep_snr_het,
         "sweep_fault": sweep_fault,
+        "sweep_participation": sweep_participation,
     }
 
 

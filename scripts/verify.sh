@@ -30,7 +30,11 @@
 # status="timeout", corrupt-cache quarantine), and the fault-injection
 # sweep smoke: the dropout x heterogeneity grid of
 # `benchmarks/sweep_fault.py --smoke` on a 2-worker pool (fault-aware
-# batched design + graceful-degradation reduction).
+# batched design + graceful-degradation reduction), and the
+# partial-participation sweep smoke: the N x S x policy grid of
+# `benchmarks/sweep_participation.py --smoke`, which fails unless the
+# co-designed sampling distribution strictly beats uniform zero-bias
+# sampling at equal expected airtime on >= 1 heterogeneous cell.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -91,17 +95,24 @@ rm -rf "experiments/results/scenarios/sweep_fault"
 python -m benchmarks.sweep_fault --smoke --jobs 2
 faultsweep_status=$?
 
+echo "== participation sweep smoke (N x S, designed-vs-uniform, --jobs 2) =="
+rm -rf "experiments/results/scenarios/sweep_participation"
+python -m benchmarks.sweep_participation --smoke --jobs 2
+partsweep_status=$?
+
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
         || [ "$minibatch_status" -ne 0 ] || [ "$design_status" -ne 0 ] \
         || [ "$mem_status" -ne 0 ] || [ "$fastrng_status" -ne 0 ] \
         || [ "$scale_status" -ne 0 ] || [ "$payload_status" -ne 0 ] \
         || [ "$sweep_status" -ne 0 ] || [ "$fault_status" -ne 0 ] \
-        || [ "$faultsweep_status" -ne 0 ]; then
+        || [ "$faultsweep_status" -ne 0 ] \
+        || [ "$partsweep_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
          "minibatch=$minibatch_status design=$design_status" \
          "mem=$mem_status fastrng=$fastrng_status scale=$scale_status" \
          "payload=$payload_status sweep=$sweep_status" \
-         "fault=$fault_status faultsweep=$faultsweep_status)" >&2
+         "fault=$fault_status faultsweep=$faultsweep_status" \
+         "partsweep=$partsweep_status)" >&2
     exit 1
 fi
 echo "verify OK"

@@ -15,10 +15,10 @@ from typing import Optional
 
 import numpy as np
 
-from ..core import digital_design, ota_design
+from ..core import digital_design, ota_design, sca_jax
 from ..core.bounds import ObjectiveWeights
 from ..core.channel import Deployment, make_deployment
-from ..core.faults import effective_lambdas
+from ..core.faults import effective_lambdas, survival_prob
 from ..data.loader import FLDataset
 from ..data.partition import partition_by_class
 from ..data.synthetic import SyntheticSpec, make_classification_dataset
@@ -185,6 +185,35 @@ class CellContext:
         setattr(self, f"{prefix}_params{suffix}", params)
         setattr(self, f"{prefix}_objective{suffix}", float(objective))
 
+    def participation_probs(self, agg) -> Optional[np.ndarray]:
+        """Co-designed sampling probabilities for one scheme, or None.
+
+        Only the ``run.participation == "designed"`` policy solves
+        anything: pi comes from the bound-driven capped-simplex solver
+        (``core.sca_jax.solve_participation_batch``) at this cell's
+        (omega_var, omega_bias) operating point, pricing the scheme's own
+        participation levels p (``params.participation_levels``; uniform
+        1/N when the scheme carries no wireless design) and the fault
+        layer's survival probabilities q — the p*pi*q composition of
+        ``bounds.effective_participation``. "uniform" and "channel" are
+        resolved inside ``core.participation`` without a solver.
+        """
+        run = self.scenario.run
+        if run.clients_per_round is None or run.participation != "designed":
+            return None
+        lam = self.dep.lambdas
+        n = lam.shape[0]
+        params = getattr(agg, "params", None)
+        if params is not None and hasattr(params, "participation_levels"):
+            p = np.asarray(params.participation_levels(lam), np.float64)
+        else:
+            p = np.full(n, 1.0 / n)
+        q = survival_prob(self.scenario.fault, lam)
+        pi, _ = sca_jax.solve_participation_batch(
+            p[None], q[None], [run.clients_per_round],
+            [self.weights.omega_var], [self.weights.omega_bias])
+        return pi[0]
+
 
 class _Memo:
     """Per-execute cache of expensive sub-materializations.
@@ -235,7 +264,8 @@ new_memo = _Memo
 def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
                  seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1),
                  backend="auto", batch_size=None, rng="replay",
-                 payload_dtype="f32", fault=None):
+                 payload_dtype="f32", fault=None, clients_per_round=None,
+                 participation="uniform", participation_probs=None):
     """Per-scheme step-size grid search (paper Sec. V: 'step sizes for all
     schemes are tuned via a small grid search'), then the full MC run.
 
@@ -251,7 +281,10 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
         for frac in etas:
             tr = FLTrainer(task, ds, dep, eta=frac * eta_max,
                            batch_size=batch_size,
-                           payload_dtype=payload_dtype, fault=fault)
+                           payload_dtype=payload_dtype, fault=fault,
+                           clients_per_round=clients_per_round,
+                           participation=participation,
+                           participation_probs=participation_probs)
             probe = tr.run(agg, rounds=rounds, trials=1,
                            eval_every=max(rounds // 4, 1), seed=seed + 91,
                            time_budget_s=time_budget_s, backend=backend,
@@ -260,7 +293,10 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
             if acc > best_acc:
                 best_acc, best_eta = acc, frac * eta_max
     tr = FLTrainer(task, ds, dep, eta=best_eta, batch_size=batch_size,
-                   payload_dtype=payload_dtype, fault=fault)
+                   payload_dtype=payload_dtype, fault=fault,
+                   clients_per_round=clients_per_round,
+                   participation=participation,
+                   participation_probs=participation_probs)
     log = tr.run(agg, rounds=rounds, trials=trials, eval_every=eval_every,
                  seed=seed, time_budget_s=time_budget_s, backend=backend,
                  rng=rng)
@@ -277,4 +313,7 @@ def run_cell_scheme(ctx: CellContext, agg):
                         etas=tuple(r.etas), backend=r.backend,
                         batch_size=r.batch_size, rng=r.rng,
                         payload_dtype=r.payload_dtype,
-                        fault=ctx.scenario.fault)
+                        fault=ctx.scenario.fault,
+                        clients_per_round=r.clients_per_round,
+                        participation=r.participation,
+                        participation_probs=ctx.participation_probs(agg))

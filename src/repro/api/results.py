@@ -36,7 +36,9 @@ import numpy as np
 #: v5: ScenarioSpec gained ``fault`` (``core.faults.FaultSpec`` — wireless
 #: fault injection + graceful-degradation policy), adding a top-level
 #: "fault" block to every spec dict.
-SCHEMA_VERSION = 5
+#: v6: RunSpec gained ``clients_per_round`` + ``participation``
+#: (partial-participation client sampling, ``core.participation``).
+SCHEMA_VERSION = 6
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_RESULTS_ROOT = Path(os.environ.get(

@@ -145,6 +145,53 @@ def sweep_fault(quick: bool = True, n_devices: int = 10) -> SweepSpec:
     return SweepSpec(name="sweep_fault", base=base, axes=axes)
 
 
+def sweep_participation(quick: bool = True, n_devices: int = 50) -> SweepSpec:
+    """Partial participation: N x S grid, uniform vs co-designed sampling.
+
+    Every cell runs under heterogeneous channel-dependent deep fades with
+    ``on_missing="zero"`` (each device holds ONE class, so a device that
+    rarely delivers drags the model away from its class — a structured
+    bias), sampling an expected S = ``run.clients_per_round`` devices per
+    round. The axes compare the zero-bias ``"uniform"`` policy (pi = S/N)
+    against the bound-driven ``"designed"`` policy at the SAME S — equal
+    expected airtime — where the capped-simplex solver
+    (``core.sca_jax.solve_participation_batch``) tilts pi toward the
+    devices that actually deliver, buying post-normalization SNR with a
+    priced sampling bias. The cells sit at the variance-limited
+    operating point (``omega_bias_scale`` shrinks the footnote-4 bias
+    weight — the declared bias-variance trade-off axis): there the
+    extra delivered mass outweighs the tilt, and designed sampling
+    strictly beats uniform at equal airtime.
+    ``benchmarks/sweep_participation.py`` reduces this grid to the
+    designed-vs-uniform domination figure.
+    """
+    base = ScenarioSpec(
+        name="sweep_participation",
+        data=DataSpec(n_train_per_class=80 if quick else 600,
+                      n_test_per_class=30 if quick else 200,
+                      samples_per_device=60 if quick else 120),
+        wireless=WirelessConfig(n_devices=12 if quick else n_devices,
+                                seed=1, pl_exponent=2.6,
+                                tx_power_dbm=10.0),
+        design=DesignPolicy(kappa=3.0 if quick else None,
+                            omega_bias_scale=1e-4),
+        run=RunSpec(rounds=20 if quick else 100, trials=2,
+                    eval_every=5 if quick else 10,
+                    etas=(1.0,) if quick else (1.0, 0.25),
+                    clients_per_round=6),
+        fault=FaultSpec(deep_fade_thresh=4.5e-7, on_missing="zero"),
+        schemes=("proposed_ota", "vanilla_ota"))
+    if quick:
+        axes = {"wireless.n_devices": (8, 12),
+                "run.clients_per_round": (4, 8),
+                "run.participation": ("uniform", "designed")}
+    else:
+        axes = {"wireless.n_devices": (max(n_devices // 2, 2), n_devices),
+                "run.clients_per_round": (8, 16),
+                "run.participation": ("uniform", "designed")}
+    return SweepSpec(name="sweep_participation", base=base, axes=axes)
+
+
 REGISTRY = {
     "fig2_ota_sc": fig2_ota_sc,
     "fig2_digital_sc": fig2_digital_sc,
@@ -152,6 +199,7 @@ REGISTRY = {
     "snr_het": snr_het,
     "sweep_smoke": sweep_smoke,
     "sweep_fault": sweep_fault,
+    "sweep_participation": sweep_participation,
 }
 
 

@@ -15,9 +15,10 @@ A ``SweepSpec`` declares grids over any spec axis by dotted path —
 ``run.rng`` (replay vs fast execution), ``run.payload_dtype`` (f32 vs
 bf16 uplink payloads), ``fault.dropout_prob`` / ``fault.deep_fade_thresh``
 / ``fault.erasure_prob`` / ``fault.straggler_prob`` / ``fault.deadline_s``
-(wireless fault injection, ``core.faults``), ... — and expands to the
-cross product of override-applied scenarios
-(``points()``).
+(wireless fault injection, ``core.faults``),
+``run.clients_per_round`` / ``run.participation`` (per-round client
+sampling, ``core.participation``), ... — and expands to the cross
+product of override-applied scenarios (``points()``).
 """
 from __future__ import annotations
 
@@ -96,6 +97,8 @@ class RunSpec:
     backend: str = "auto"
     rng: str = "replay"                  # "replay" (oracle-exact) | "fast"
     payload_dtype: str = "f32"           # uplink gradient payload: f32|bf16
+    clients_per_round: Optional[int] = None  # S: partial participation (off)
+    participation: str = "uniform"       # sampling: uniform|channel|designed
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,31 +33,47 @@ def bias_sum(p: np.ndarray) -> float:
 
 
 def effective_participation(p: np.ndarray, q: np.ndarray,
-                            on_missing: str = "reweight") -> np.ndarray:
-    """Participation levels under the fault layer, per degradation policy.
+                            on_missing: str = "reweight",
+                            pi=None) -> np.ndarray:
+    """Participation levels under the fault + sampling layers.
 
     ``p`` are the designed participation levels (E[chi]/nu), ``q`` the
     per-device round-survival probabilities
-    (``core.faults.survival_prob``). The Theorem-1/2 bias term prices the
-    fault-induced participation shift by evaluating :func:`bias_sum` on
-    the *effective* levels returned here:
+    (``core.faults.survival_prob``), ``pi`` the optional Bernoulli
+    client-sampling inclusion probabilities
+    (``core.participation``, sum_m pi_m = S). The Theorem-1/2 bias term
+    prices every participation shift by evaluating :func:`bias_sum` on
+    the *effective* levels returned here.
+
+    Fault degradation policy (``on_missing``):
 
       * ``"reweight"`` — inverse-propensity weighting restores the mean:
-        effective participation is ``p`` (faults add variance, not bias).
+        the fault factor is 1 (faults add variance, not bias).
       * ``"zero"`` — missing payloads are zero-filled, shrinking device m
-        by its survival rate: ``p * q`` — the priced outage bias.
+        by its survival rate: factor ``q`` — the priced outage bias.
       * ``"stale"`` — the last received gradient stands in, so the
-        participation *level* stays ``p``; the staleness of the gradient
-        itself is a time-correlated bias outside the bound's model (see
-        ``core.faults`` — the empirical comparison point).
+        participation *level* keeps factor 1; the staleness of the
+        gradient itself is a time-correlated bias outside the bound's
+        model (see ``core.faults`` — the empirical comparison point).
+
+    Sampling factor: included payloads are scaled by the uniform inverse
+    propensity N/S, so device m's level tilts by ``pi_m * N / S``
+    (exactly 1 under the zero-bias uniform policy pi = S/N). Faults and
+    sampling are independent per round, so the factors compose
+    multiplicatively — ``p * pi * q`` up to the N/S scale.
     """
     p = np.asarray(p, dtype=np.float64)
     q = np.asarray(q, dtype=np.float64)
     if on_missing == "zero":
-        return p * q
-    if on_missing in ("reweight", "stale"):
-        return p.copy()
-    raise ValueError(f"unknown on_missing policy {on_missing!r}")
+        eff = p * q
+    elif on_missing in ("reweight", "stale"):
+        eff = p.copy()
+    else:
+        raise ValueError(f"unknown on_missing policy {on_missing!r}")
+    if pi is not None:
+        pi = np.asarray(pi, dtype=np.float64)
+        eff = eff * pi * (pi.shape[0] / np.sum(pi))
+    return eff
 
 
 @dataclasses.dataclass(frozen=True)

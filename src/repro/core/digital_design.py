@@ -364,6 +364,12 @@ def design_digital_direct(spec: DigitalDesignSpec, *, maxiter: int = 400
     def solve_from(p0, b0, r0):
         x0 = np.concatenate([p0, b0, r0])
         scale = 1.0 / max(abs(f(x0)), 1e-30)
+        # anchor betas from _fit_latency can undershoot the box (SLSQP
+        # would clip internally, warning); the scale above is evaluated at
+        # the raw anchor so the explicit clip is solution-preserving
+        lo = np.array([1e-8] * n + [1e-6] * n + [0.5] * n)
+        hi = np.array([1.0] * n + [1 - 1e-9] * n + [spec.r_max - 1.0] * n)
+        x0 = np.clip(x0, lo, hi)
         res = optimize.minimize(
             lambda x: scale * f(x), x0, method="SLSQP",
             bounds=([(1e-8, 1.0)] * n + [(1e-6, 1 - 1e-9)] * n
@@ -454,3 +460,23 @@ def design_digital_batch(specs: Sequence[DigitalDesignSpec],
         p, beta, r = x[:n], x[n:2 * n], x[2 * n:]
         params.append(finalize(s, p, np.clip(beta, 1e-12, 1 - 1e-12), r))
     return params, objs
+
+
+def design_digital_participation(spec: DigitalDesignSpec,
+                                 params: DigitalParams, clients: int, *,
+                                 survival=None) -> tuple[np.ndarray, float]:
+    """Co-designed Bernoulli inclusion probabilities pi, digital family.
+
+    Same sampling problem as ``ota_design.design_ota_participation`` but
+    with the digital scheme's effective levels ``p_m = beta_m/nu_m``
+    (``DigitalParams.participation_levels``). Returns (pi, objective).
+    """
+    from . import sca_jax
+
+    p = np.asarray(params.participation_levels(spec.lambdas), np.float64)
+    q = (np.ones_like(p) if survival is None
+         else np.asarray(survival, np.float64))
+    pi, obj = sca_jax.solve_participation_batch(
+        p[None], q[None], [clients],
+        [spec.weights.omega_var], [spec.weights.omega_bias])
+    return pi[0], float(obj[0])

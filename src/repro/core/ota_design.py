@@ -307,7 +307,9 @@ def design_ota_direct(spec: OTADesignSpec, *, anchor: Optional[np.ndarray] = Non
         anchor_min_noise(spec), anchor_zero_bias(spec)]
     best_g, best_f = None, np.inf
     for a0 in anchors:
-        res = optimize.minimize(f, a0 / u_g, jac=True, method="L-BFGS-B",
+        # start inside the box (heuristic anchors can graze its edges)
+        x0 = np.clip(a0 / u_g, 1e-6, gmax / u_g)
+        res = optimize.minimize(f, x0, jac=True, method="L-BFGS-B",
                                 bounds=[(1e-6, gmax[m] / u_g) for m in range(n)],
                                 options={"maxiter": maxiter})
         if res.fun < best_f:
@@ -370,3 +372,30 @@ def design_ota_batch(specs: Sequence[OTADesignSpec],
     params = [params_from_gamma(s, np.clip(g, 0.0, s.gamma_max()))
               for s, g in zip(specs, gammas)]
     return params, objs
+
+
+def design_ota_participation(spec: OTADesignSpec, params: OTAParams,
+                             clients: int, *, survival=None
+                             ) -> tuple[np.ndarray, float]:
+    """Co-designed Bernoulli inclusion probabilities pi for OTA schemes.
+
+    Given a solved OTA design (its effective participation levels
+    ``p_m = alpha_m/alpha``) and an expected cohort size S, solves the
+    bound-shaped sampling problem (``core.sca_jax.
+    solve_participation_batch``) under the cell's bias/variance weights;
+    ``survival`` are the fault-layer survival probabilities q_m (ones
+    when faults are off), so outage and sampling bias are priced jointly
+    (effective levels ~ p * pi * q).
+
+    Returns (pi, objective): the (N,) probabilities on the capped simplex
+    {sum pi = S, pi <= 1} and the sampling objective value.
+    """
+    from . import sca_jax
+
+    p = np.asarray(params.participation_levels(spec.lambdas), np.float64)
+    q = (np.ones_like(p) if survival is None
+         else np.asarray(survival, np.float64))
+    pi, obj = sca_jax.solve_participation_batch(
+        p[None], q[None], [clients],
+        [spec.weights.omega_var], [spec.weights.omega_bias])
+    return pi[0], float(obj[0])

@@ -1,0 +1,177 @@
+"""Partial device participation: per-round client sampling as priced bias.
+
+The paper's Sec.-IV designs pick time-invariant participation *levels*
+p_m for a cohort that shows up every round; at population scale (N in the
+thousands) the PS instead samples a cohort of expected size
+S = ``clients_per_round`` each round. This module supplies the sampling
+layer both simulation backends share:
+
+  * **Poisson (independent Bernoulli) sampling** with static per-device
+    inclusion probabilities pi_m, sum_m pi_m = S. Each round device m is
+    included iff ``u_m < pi_m`` with ``u`` one (N,) uniform block from the
+    counter-based PARTICIPATE stream (``core.rngstream``) — a pure
+    threefry function of ``(seed, trial, round)``, so the NumPy oracle
+    and the JAX engine (in both ``rng="replay"`` and ``rng="fast"``
+    modes) see bit-identical cohort realizations.
+  * Included gradients are scaled by the **uniform inverse propensity**
+    N/S (not 1/pi_m): under the ``"uniform"`` policy (pi_m = S/N) this is
+    the exact Horvitz–Thompson correction — zero sampling bias — while a
+    non-uniform pi tilts the effective participation level of device m to
+    ``p_m * pi_m * (N/S)``: a *structured, static sampling bias* the
+    Theorem-1/2 bound prices through ``bounds.effective_participation`` /
+    ``bounds.bias_sum``, exactly like the fault layer's outage bias
+    (the two compose multiplicatively, ``p * pi * q``).
+
+Policies (``POLICIES``):
+
+  * ``"uniform"``  — pi_m = S/N: zero-bias reference point.
+  * ``"channel"``  — pi proportional to the average channel energies
+    Lambda_m, scaled onto the capped simplex {sum pi = S, pi <= 1}
+    (:func:`capped_proportional`): the classic channel-aware heuristic.
+  * ``"designed"`` — pi from the bound-driven co-design solver
+    (``core.sca_jax.solve_participation_batch`` via the family wrappers
+    ``ota_design.design_ota_participation`` /
+    ``digital_design.design_digital_participation``); requires explicit
+    probabilities at the trainer/engine layer.
+
+Arbitrary static probabilities are supported directly: pass
+``participation_probs`` (any (N,) vector on the capped simplex) to the
+trainer/engine and it overrides the policy's construction.
+
+``clients_per_round=None`` disables the layer entirely —
+:func:`resolve` returns None and both backends take their exact
+pre-participation code paths (bit-identical trajectories, mirroring the
+``FaultSpec`` strict-no-op contract). ``clients_per_round == N`` is
+allowed: pi = 1, every device always participates, scale N/S = 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+POLICIES = ("uniform", "channel", "designed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedParticipation:
+    """Validated, backend-shared sampling configuration (hashable).
+
+    ``probs`` is a float64 tuple so the object keys the engine's jitted
+    runner cache and compares by content across trainer rebuilds.
+    """
+
+    clients: int                 # S — expected cohort size per round
+    policy: str                  # provenance: "uniform"|"channel"|"designed"
+    probs: tuple                 # (N,) inclusion probabilities, sum == S
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.probs)
+
+    @property
+    def scale(self) -> float:
+        """The uniform inverse-propensity payload scale N/S."""
+        return self.n_devices / self.clients
+
+    def probs_array(self) -> np.ndarray:
+        return np.asarray(self.probs, dtype=np.float64)
+
+
+def capped_proportional(weights: np.ndarray, clients: int,
+                        tol: float = 1e-12) -> np.ndarray:
+    """Scale ``weights`` onto the capped simplex {sum pi = S, pi <= 1}.
+
+    Water-filling bisection on the scalar c in ``pi = min(c * w, 1)``:
+    the sum is monotone non-decreasing in c, so the root is bracketed by
+    doubling and closed by bisection. Deterministic pure NumPy — both
+    backends resolve the identical pi bits.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    n = w.shape[0]
+    if np.any(w < 0) or not np.all(np.isfinite(w)):
+        raise ValueError("participation weights must be finite and >= 0")
+    s = float(clients)
+    if s >= n:
+        return np.ones(n)
+    pos = w > 0
+    if int(pos.sum()) < clients:
+        raise ValueError(
+            f"clients_per_round={clients} exceeds the {int(pos.sum())} "
+            "devices with positive participation weight")
+    total = lambda c: float(np.sum(np.minimum(c * w, 1.0)))
+    hi = 1.0 / float(np.max(w))
+    while total(hi) < s:
+        hi *= 2.0
+    lo = 0.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if total(mid) < s:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo <= tol * max(hi, 1.0):
+            break
+    pi = np.minimum(hi * w, 1.0)
+    # bisection leaves an O(tol) gap on sum(pi); close it on the uncapped
+    # coordinates so sum == S holds to float64 round-off
+    free = pi < 1.0
+    gap = s - float(pi.sum())
+    if np.any(free):
+        pi[free] += gap * (pi[free] / max(float(pi[free].sum()), 1e-300))
+    return np.clip(pi, 0.0, 1.0)
+
+
+def resolve(clients_per_round: Optional[int], policy: str = "uniform",
+            probs=None, *, n_devices: int,
+            lambdas=None) -> Optional[ResolvedParticipation]:
+    """Normalize the (clients, policy, probs) knobs both backends take.
+
+    Returns None when ``clients_per_round`` is None (the strict no-op);
+    otherwise a validated :class:`ResolvedParticipation`. Explicit
+    ``probs`` override the policy's construction (that is how "designed"
+    probabilities reach the trainer); the "channel" policy needs
+    ``lambdas``.
+    """
+    if clients_per_round is None:
+        if probs is not None:
+            raise ValueError(
+                "participation_probs given but clients_per_round is None; "
+                "set clients_per_round to enable partial participation")
+        return None
+    if policy not in POLICIES:
+        raise ValueError(
+            f"participation must be one of {POLICIES}, got {policy!r}")
+    s = int(clients_per_round)
+    if not 1 <= s <= n_devices:
+        raise ValueError(
+            f"clients_per_round must be in [1, n_devices={n_devices}], "
+            f"got {clients_per_round!r}")
+    if probs is not None:
+        pi = np.asarray(probs, dtype=np.float64)
+        if pi.shape != (n_devices,):
+            raise ValueError(
+                f"participation_probs must have shape ({n_devices},), "
+                f"got {pi.shape}")
+        if np.any(pi <= 0.0) or np.any(pi > 1.0):
+            raise ValueError(
+                "participation_probs must lie in (0, 1] per device")
+        if abs(float(pi.sum()) - s) > 1e-6 * s:
+            raise ValueError(
+                f"participation_probs must sum to clients_per_round={s}, "
+                f"got sum {float(pi.sum()):.9g}")
+    elif policy == "uniform":
+        pi = np.full(n_devices, s / n_devices)
+    elif policy == "channel":
+        if lambdas is None:
+            raise ValueError(
+                "participation='channel' needs the deployment lambdas")
+        pi = capped_proportional(np.asarray(lambdas, np.float64), s)
+    else:   # "designed" without explicit probabilities
+        raise ValueError(
+            "participation='designed' needs explicit participation_probs "
+            "(solve them with core.sca_jax.solve_participation_batch or "
+            "the design-module wrappers)")
+    return ResolvedParticipation(clients=s, policy=policy,
+                                 probs=tuple(pi.tolist()))

@@ -43,6 +43,13 @@ fast-mode-only tags below — the fault stream is counter-based in *both*
 rng modes, so injected outages/erasures/stragglers are bit-identical
 across rng="replay"/"fast" and across the NumPy/JAX backends.
 
+Partial participation (``core.participation``) draws one (N,) uniform
+block per round from its own counter-based stream (PARTICIPATE_TAG,
+:func:`participation_block` / :func:`participation_block_np`). Like the
+fault stream it is counter-based in *both* rng modes, so the sampled
+cohort of every round is bit-identical across rng="replay"/"fast" and
+across the NumPy/JAX backends.
+
 Fast mode (``FLTrainer.run(..., rng="fast")``) extends the counter-based
 design to *every* stream: PS AWGN (:func:`noise_block`, NOISE_TAG),
 Rayleigh fading (FADING_TAG, sampled by ``channel.sample_fading_jax``)
@@ -81,6 +88,36 @@ SELECT_TAG = 47   # device-selection draws (per-port sel_stream_jax)
 #: fault realizations are bit-identical across rng="replay"/"fast" and
 #: across the NumPy/JAX backends.
 FAULT_TAG = 53
+
+#: Partial-participation stream: the per-round client-sampling uniforms
+#: (one (N,) block per round, ``fl.engine`` / ``fl.trainer``). Counter-based
+#: in BOTH rng modes (like FAULT), so the sampled cohort of every round is
+#: bit-identical across rng="replay"/"fast" and across the NumPy/JAX
+#: backends.
+PARTICIPATE_TAG = 59
+
+
+#: Bound on the per-stream (seed, trial) -> base-key memos below.
+_KEY_CACHE_MAX = 256
+
+
+def _cached_base_key(cache: dict, seed: int, trial: int,
+                     make: Callable[[int, int], jax.Array]) -> jax.Array:
+    """Bounded-LRU memo for per-(seed, trial) base keys.
+
+    Hits refresh recency; when full, only the least-recently-used entry is
+    evicted — a sweep cycling through many (seed, trial) pairs never
+    cold-restarts the keys it is actively using (the old ``.clear()``-when-
+    full behavior dropped all live entries at once).
+    """
+    ck = (int(seed), int(trial))
+    key = cache.pop(ck, None)
+    if key is None:
+        if len(cache) >= _KEY_CACHE_MAX:
+            cache.pop(next(iter(cache)))
+        key = make(seed, trial)
+    cache[ck] = key          # (re)insert at the recent end
+    return key
 
 
 def stream_base_key(seed: int, trial: int, tag: int) -> jax.Array:
@@ -126,19 +163,18 @@ def dither_block(key: jax.Array, t, n: int, d: int) -> jnp.ndarray:
                               dtype=jnp.float32)
 
 
-def dither_block_np(seed: int, trial: int, t: int, n: int, d: int,
-                    _key_cache: dict = {}) -> np.ndarray:
+_DITHER_KEY_CACHE: dict = {}
+
+
+def dither_block_np(seed: int, trial: int, t: int, n: int,
+                    d: int) -> np.ndarray:
     """Oracle view of :func:`dither_block`: (n, d) float64 numpy array.
 
-    The base key is memoized per (seed, trial) so the per-round cost in the
-    Python training loop is one fold_in + uniform dispatch.
+    The base key is memoized per (seed, trial) (bounded LRU) so the
+    per-round cost in the Python training loop is one fold_in + uniform
+    dispatch.
     """
-    ck = (int(seed), int(trial))
-    key = _key_cache.get(ck)
-    if key is None:
-        if len(_key_cache) > 256:
-            _key_cache.clear()
-        key = _key_cache[ck] = dither_base_key(seed, trial)
+    key = _cached_base_key(_DITHER_KEY_CACHE, seed, trial, dither_base_key)
     return np.asarray(dither_block(key, t, n, d), dtype=np.float64)
 
 
@@ -161,21 +197,54 @@ def fault_block(key: jax.Array, t, n: int) -> jnp.ndarray:
                               dtype=jnp.float32)
 
 
-def fault_block_np(seed: int, trial: int, t: int, n: int,
-                   _key_cache: dict = {}) -> np.ndarray:
+_FAULT_KEY_CACHE: dict = {}
+
+
+def fault_block_np(seed: int, trial: int, t: int, n: int) -> np.ndarray:
     """Oracle view of :func:`fault_block`: (3, n) float64 numpy array.
 
-    The base key is memoized per (seed, trial) so the per-round cost in
-    the Python training loop is one fold_in + uniform dispatch (the
-    dither-block pattern).
+    The base key is memoized per (seed, trial) (bounded LRU) so the
+    per-round cost in the Python training loop is one fold_in + uniform
+    dispatch (the dither-block pattern).
     """
-    ck = (int(seed), int(trial))
-    key = _key_cache.get(ck)
-    if key is None:
-        if len(_key_cache) > 256:
-            _key_cache.clear()
-        key = _key_cache[ck] = fault_base_key(seed, trial)
+    key = _cached_base_key(_FAULT_KEY_CACHE, seed, trial, fault_base_key)
     return np.asarray(fault_block(key, t, n), dtype=np.float64)
+
+
+def participate_base_key(seed: int, trial: int) -> jax.Array:
+    """Per-trial base key for the client-participation stream (threefry)."""
+    return stream_base_key(seed, trial, PARTICIPATE_TAG)
+
+
+def participation_block(key: jax.Array, t, n: int) -> jnp.ndarray:
+    """(n,) float32 participation uniforms for round ``t`` (scan-traceable).
+
+    Device ``m`` is in round ``t``'s sampled cohort iff
+    ``block[m] < pi_m`` for its static inclusion probability ``pi_m``
+    (``core.participation``). ``key`` is the trial's
+    :func:`participate_base_key`; ``t`` may be a traced scalar, so the
+    engine folds the round index inside ``lax.scan``. Drawn in float32;
+    both consumers widen to float64 (exact, the fault-block pattern) so
+    they compare the identical value against the float64 probabilities.
+    """
+    return jax.random.uniform(jax.random.fold_in(key, t), (n,),
+                              dtype=jnp.float32)
+
+
+_PARTICIPATE_KEY_CACHE: dict = {}
+
+
+def participation_block_np(seed: int, trial: int, t: int,
+                           n: int) -> np.ndarray:
+    """Oracle view of :func:`participation_block`: (n,) float64 numpy.
+
+    The base key is memoized per (seed, trial) (bounded LRU) so the
+    per-round cost in the Python training loop is one fold_in + uniform
+    dispatch (the fault-block pattern).
+    """
+    key = _cached_base_key(_PARTICIPATE_KEY_CACHE, seed, trial,
+                           participate_base_key)
+    return np.asarray(participation_block(key, t, n), dtype=np.float64)
 
 
 def batch_base_key(seed: int, trial: int) -> jax.Array:
@@ -261,14 +330,11 @@ def batch_block_mixed(key: jax.Array, t, sizes: tuple,
     return jnp.stack(rows).astype(jnp.int32)
 
 
-def _batch_key_np(seed: int, trial: int, _key_cache: dict = {}) -> jax.Array:
-    ck = (int(seed), int(trial))
-    key = _key_cache.get(ck)
-    if key is None:
-        if len(_key_cache) > 256:
-            _key_cache.clear()
-        key = _key_cache[ck] = batch_base_key(seed, trial)
-    return key
+_BATCH_KEY_CACHE: dict = {}
+
+
+def _batch_key_np(seed: int, trial: int) -> jax.Array:
+    return _cached_base_key(_BATCH_KEY_CACHE, seed, trial, batch_base_key)
 
 
 def batch_indices_np(seed: int, trial: int, t: int, m: int, n_data: int,

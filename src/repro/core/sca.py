@@ -17,6 +17,7 @@ directly. Each design module supplies:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -46,20 +47,41 @@ class SCAResult:
 
 def solve_surrogate(prob: SurrogateProblem, maxiter: int = 200) -> np.ndarray:
     cons = list(prob.ineq_constraints) + list(prob.eq_constraints)
+    lo = np.array([b[0] if b[0] is not None else -np.inf for b in prob.bounds])
+    hi = np.array([b[1] if b[1] is not None else np.inf for b in prob.bounds])
+    # Re-anchored starts can sit (marginally) outside the box — the design
+    # modules' ``project()`` floors differ from the SLSQP bounds — and SLSQP
+    # warns ("Values in x were outside bounds...") before clipping
+    # internally. Clip the start into the box up front so the solve begins
+    # feasible and the warning never fires.
+    x0 = np.clip(np.asarray(prob.x0, dtype=np.float64), lo, hi)
     # Normalize the objective to O(1) at the anchor — SLSQP's line search is
     # not scale invariant and the raw design objectives span ~1e5 (the paper
-    # itself flags the ill-conditioning of (15)).
+    # itself flags the ill-conditioning of (15)). The scale is evaluated at
+    # the *raw* anchor: SLSQP always optimized from the clipped point (it
+    # clipped internally), so keeping the old scale makes the explicit clip
+    # solution-preserving to the last bit.
     f0 = abs(float(prob.objective(prob.x0)))
     scale = 1.0 / max(f0, 1e-30)
     fun = lambda x: scale * prob.objective(x)
     jac = None if prob.grad is None else (lambda x: scale * prob.grad(x))
-    res = optimize.minimize(
-        fun, prob.x0, jac=jac, method="SLSQP",
-        bounds=prob.bounds, constraints=cons,
-        options={"maxiter": maxiter, "ftol": 1e-14})
+    with warnings.catch_warnings():
+        # Even from an in-box start, SLSQP's Fortran line search can propose
+        # trial points marginally outside the box mid-iteration; SciPy clips
+        # them before evaluating (its ScalarFunction wrapper) and emits a
+        # RuntimeWarning from inside the solve loop. The clipping is exactly
+        # the behaviour we rely on — and we clip the returned x again below —
+        # so the warning carries no signal here. Scoped to this one message;
+        # every other RuntimeWarning still propagates (tier-1 runs with
+        # RuntimeWarning-as-error).
+        warnings.filterwarnings(
+            "ignore", message="Values in x were outside bounds",
+            category=RuntimeWarning)
+        res = optimize.minimize(
+            fun, x0, jac=jac, method="SLSQP",
+            bounds=prob.bounds, constraints=cons,
+            options={"maxiter": maxiter, "ftol": 1e-14})
     x = np.asarray(res.x, dtype=np.float64)
-    lo = np.array([b[0] if b[0] is not None else -np.inf for b in prob.bounds])
-    hi = np.array([b[1] if b[1] is not None else np.inf for b in prob.bounds])
     return np.clip(x, lo, hi)
 
 

@@ -47,6 +47,10 @@ _OTA_STEPS = 300
 _DIG_MUS = (1.0, 10.0, 100.0, 1e3, 1e4)
 _DIG_LRS = (0.05, 0.02, 0.01, 0.005, 0.002)
 _DIG_STEPS = 400
+# Participation co-design: projected Adam on the capped simplex.
+_PART_LRS = (0.1, 0.03, 0.01)
+_PART_STEPS = 300
+_PART_PI_MIN = 1e-6
 
 _B1, _B2, _ADAM_EPS = 0.9, 0.999, 1e-12
 
@@ -92,6 +96,126 @@ def _adam_descent(value_and_grad, x0, lo, hi, *, lr, n_steps, track_best):
     (x, _, _, bx, bf), _ = jax.lax.scan(
         step, (x0, m0, v0, x0, f0), jnp.arange(n_steps))
     return x, bx, bf
+
+
+def capped_simplex_projection_jax(v: jnp.ndarray, s, lo=_PART_PI_MIN,
+                                  hi=1.0) -> jnp.ndarray:
+    """Euclidean projection onto {sum x = s, lo <= x <= hi} (jittable).
+
+    Bisection on the dual shift tau in ``x = clip(v - tau, lo, hi)``: the
+    coordinate sum is monotone non-increasing in tau, bracketed by
+    [min(v) - hi, max(v) - lo]. A fixed iteration count (no data-dependent
+    loop) keeps the projection scan/vmap-friendly; 100 halvings close the
+    bracket far below float64 resolution.
+    """
+    def body(carry, _):
+        lo_t, hi_t = carry
+        mid = 0.5 * (lo_t + hi_t)
+        tot = jnp.sum(jnp.clip(v - mid, lo, hi))
+        return (jnp.where(tot > s, mid, lo_t),
+                jnp.where(tot > s, hi_t, mid)), None
+
+    bracket = (jnp.min(v) - hi, jnp.max(v) - lo)
+    (_, tau), _ = jax.lax.scan(body, bracket, None, length=100)
+    return jnp.clip(v - tau, lo, hi)
+
+
+# -------------------------------------------- participation co-design
+
+def _solve_participation_one(p, q, s, wv, wb):
+    """One participation design point: Bernoulli inclusion probs pi.
+
+    Minimizes the bound-shaped objective over the capped simplex
+    {sum pi = S, pi_min <= pi <= 1}: with the *effective participation
+    levels* ``e = p * pi * q * (N/S)`` — exactly
+    ``bounds.effective_participation`` under zero-fill degradation, the
+    regime where sampling bias is priced —
+
+        J(pi) = omega_bias * sum (e - 1/N)^2             (priced bias)
+              + omega_var  / (sum e)^2                   (noise inflation)
+
+    The variance term is the post-normalization noise proxy of a wireless
+    aggregate: the PS noise is per-round and common, so the effective
+    noise power after dividing by the delivered signal mass scales as
+    1/(sum_m e_m)^2 — a cohort that samples devices the fades starve
+    delivers less mass and amplifies noise. The solver therefore trades
+    tilting pi toward reliably-delivering devices (throughput / variance)
+    against leveling the effective participation at 1/N (bias), the same
+    bias-variance structure as (15a)/(17a). Three anchors (uniform,
+    proportional to p*q, proportional to sqrt(p*q)) feed projected Adam
+    stages at decreasing step sizes; best feasible iterate wins.
+    """
+    n = p.shape[0]
+    w = jnp.maximum(p * q, 1e-30)
+
+    def obj(pi):
+        e = (n / s) * w * pi
+        return (wb * jnp.sum((e - 1.0 / n) ** 2)
+                + wv / jnp.sum(e) ** 2)
+
+    proj = lambda x: capped_simplex_projection_jax(x, s)
+    anchors = jnp.stack([
+        jnp.full((n,), s / n),
+        proj(w * (s / jnp.sum(w))),
+        proj(jnp.sqrt(w) * (s / jnp.sum(jnp.sqrt(w)))),
+    ])
+    vg = jax.value_and_grad(obj)
+    scale = 1.0 / jnp.maximum(jnp.abs(obj(anchors[0])), 1e-30)
+
+    def run_anchor(x0):
+        def stage(carry, lr):
+            x, bx, bf = carry
+
+            def step(inner, i):
+                x, m, v = inner
+                f, g = vg(x)
+                g = g * scale
+                m = _B1 * m + (1.0 - _B1) * g
+                v = _B2 * v + (1.0 - _B2) * g * g
+                mhat = m / (1.0 - _B1 ** (i + 1))
+                vhat = v / (1.0 - _B2 ** (i + 1))
+                x = proj(x - lr * mhat / (jnp.sqrt(vhat) + _ADAM_EPS))
+                return (x, m, v), None
+
+            (x, _, _), _ = jax.lax.scan(
+                step, (x, jnp.zeros_like(x), jnp.zeros_like(x)),
+                jnp.arange(_PART_STEPS))
+            f = obj(x)
+            bx = jnp.where(f < bf, x, bx)
+            bf = jnp.minimum(f, bf)
+            return (bx, bx, bf), None           # re-anchor at the best
+
+        (_, bx, bf), _ = jax.lax.scan(stage, (x0, x0, obj(x0)),
+                                      jnp.asarray(_PART_LRS))
+        return bx, bf
+
+    bxs, bfs = jax.vmap(run_anchor)(anchors)
+    i = jnp.argmin(bfs)
+    return bxs[i], bfs[i]
+
+
+@functools.lru_cache(maxsize=None)
+def _participation_solver_jit():
+    return jax.jit(jax.vmap(_solve_participation_one))
+
+
+def solve_participation_batch(p, q, clients, omega_var, omega_bias):
+    """Solve a batch of participation co-design problems in one jit.
+
+    Args (leading batch axis B; N devices): p (B, N) effective scheme
+    participation levels, q (B, N) fault survival probabilities (ones when
+    faults are off), clients (B,) expected cohort sizes S, omega_var /
+    omega_bias (B,) the cell's bound weights.
+
+    Returns:
+      (pi, objectives): (B, N) float64 inclusion probabilities on the
+      capped simplex {sum pi = S, pi <= 1} and (B,) objective values.
+    """
+    with enable_x64():
+        args = [jnp.asarray(np.asarray(a, dtype=np.float64))
+                for a in (p, q, clients, omega_var, omega_bias)]
+        pi, obj = _participation_solver_jit()(*args)
+        return np.asarray(pi), np.asarray(obj)
 
 
 # ------------------------------------------------------------- OTA (15)

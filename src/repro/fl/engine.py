@@ -63,6 +63,14 @@ port inherits it; "stale" carries the last received (N, d) gradients in
 the scan carry. With faults disabled the scan traces the exact pre-fault
 program — disabled-fault runs are bit-identical to a fault-free build.
 
+Partial participation (``core.participation``) runs in-scan the same way:
+one (N,) counter-based uniform block per round (PARTICIPATE_TAG —
+bit-identical across both rng modes and both backends) draws the Bernoulli
+cohort ``chi_m = u_m < pi_m``; excluded payloads zero out and included
+ones carry the uniform inverse-propensity scale N/S, upstream of the
+fault layer and every scheme's combiner. ``clients_per_round=None``
+traces the exact pre-participation program (bit-identical runs).
+
 Time budgets run in-scan: cumulative wall-clock rides in the scan carry,
 every round is masked by ``t_wall < budget`` (``jnp.where``), and each eval
 segment reports the last *live* model state — replicating the trainer's
@@ -90,6 +98,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from ..core import baselines as B
+from ..core import participation as participation_lib
 from ..core import rngstream
 from ..core.channel import Deployment, sample_fading_batch, sample_fading_jax
 from ..core.digital import (capacity_rate_jnp, digital_round_jax,
@@ -524,7 +533,10 @@ class FLEngine:
                  batch_size: Optional[int] = None,
                  use_kernel: bool = True, shard_trials: bool = False,
                  payload_dtype: str = "f32",
-                 fault: Optional[FaultSpec] = None):
+                 fault: Optional[FaultSpec] = None,
+                 clients_per_round: Optional[int] = None,
+                 participation: str = "uniform",
+                 participation_probs=None):
         if payload_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
@@ -539,6 +551,12 @@ class FLEngine:
         # a disabled FaultSpec normalizes to None: the scan traces the
         # exact pre-fault program, so disabled-fault runs are bit-identical
         self.fault = fault if fault is not None and fault.enabled else None
+        # clients_per_round=None likewise normalizes to None (strict
+        # no-op); otherwise the validated sampling config is shared with
+        # the oracle bit-for-bit (core.participation)
+        self.participation = participation_lib.resolve(
+            clients_per_round, participation, participation_probs,
+            n_devices=deployment.n_devices, lambdas=deployment.lambdas)
         sizes = tuple(len(d) for d in dataset.devices)
         if len(set(sizes)) == 1:
             self.device_sizes = None      # equal sizes: plain stacked arrays
@@ -609,7 +627,7 @@ class FLEngine:
         key = (self.task, trials, n_seg, eval_every, d, N,
                self.xs.shape, self.batch_size, self.device_sizes,
                self.use_kernel, self.shard_trials, rng_mode,
-               self.payload_dtype, self.fault)
+               self.payload_dtype, self.fault, self.participation)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
@@ -657,12 +675,19 @@ class FLEngine:
             has_deadline = fault.deadline_s is not None
             deadline = float(fault.deadline_s) if has_deadline else np.inf
             straggler_mult = float(fault.straggler_mult)
+        # participation layer: trace-time static like the fault layer —
+        # with clients_per_round=None the scan below is the exact
+        # pre-participation program (bit-identical runs)
+        part = self.participation
+        if part is not None:
+            part_probs = jnp.asarray(part.probs_array(), jnp.float64)
+            part_scale = float(part.scale)
 
         def trial_fn(w0, eta, radius, lat_div, budget, xs, ys, dkey, bkey,
-                     fkey, A, B_, C, Ts):
-            # dkey/bkey/fkey: scan-carried / closed-over per-trial dither,
-            # batch-index and fault-stream keys (counter-based in both
-            # modes).
+                     fkey, pkey, A, B_, C, Ts):
+            # dkey/bkey/fkey/pkey: scan-carried / closed-over per-trial
+            # dither, batch-index, fault- and participation-stream keys
+            # (counter-based in both modes).
             # replay: A=H (n_seg, eval_every, N) complex, B_=Z
             # (n_seg, eval_every, dz), C=SEL (n_seg, eval_every, S) — host
             # precomputed tensors fed through the scan.
@@ -719,6 +744,17 @@ class FLEngine:
                     # the device truncated to bf16; aggregation stays in
                     # the engine's wide accumulators
                     g = g.astype(jnp.bfloat16).astype(jnp.float64)
+                if part is not None:
+                    # Bernoulli client sampling (counter-based PARTICIPATE
+                    # stream, bit-identical across backends/rng modes):
+                    # excluded payloads zero out, included ones carry the
+                    # uniform inverse-propensity scale N/S — applied
+                    # upstream of the fault layer and the scheme's
+                    # combiner (non-participants keep their reserved
+                    # slots, like faulted devices)
+                    up = rngstream.participation_block(pkey, t, N)
+                    chi = up.astype(jnp.float64) < part_probs
+                    g = g * (chi.astype(jnp.float64) * part_scale)[:, None]
                 if fault is not None:
                     # counter-based fault draws + degradation policy,
                     # applied to the payloads *upstream* of the scheme's
@@ -785,7 +821,7 @@ class FLEngine:
         vmapped = jax.vmap(
             trial_fn,
             in_axes=(None, None, None, None, None, None, None,
-                     0, 0, 0, 0, 0, 0, None))
+                     0, 0, 0, 0, 0, 0, 0, None))
         if self.shard_trials:
             from ..compat import shard_map as shard_map_compat
             n_hw = len(jax.devices())
@@ -799,7 +835,7 @@ class FLEngine:
                 vmapped, mesh,
                 in_specs=(P(), P(), P(), P(), P(), P(), P(),
                           P("trials"), P("trials"), P("trials"), P("trials"),
-                          P("trials"), P("trials"), P()),
+                          P("trials"), P("trials"), P("trials"), P()),
                 out_specs=(P("trials"), P("trials")),
                 manual_axes=("trials",))
         runner = jax.jit(vmapped)
@@ -853,10 +889,13 @@ class FLEngine:
                           for tr in range(trials)])
         bkeys = jnp.stack([rngstream.batch_base_key(seed, tr)
                            for tr in range(trials)])
-        # fault-stream base keys ride along unconditionally (cheap, and
-        # keeps trial_fn's arity mode- and fault-blind); with faults
+        # fault- and participation-stream base keys ride along
+        # unconditionally (cheap, and keeps trial_fn's arity mode-,
+        # fault- and participation-blind); when the matching layer is
         # disabled the traced program never consumes them
         fkeys = jnp.stack([rngstream.fault_base_key(seed, tr)
+                           for tr in range(trials)])
+        pkeys = jnp.stack([rngstream.participate_base_key(seed, tr)
                            for tr in range(trials)])
 
         with enable_x64():
@@ -881,7 +920,7 @@ class FLEngine:
                 A, B_, C = seg(H), seg(Z), seg(SEL)
             ws, walls = runner(w0, eta, radius, lat_div, budget,
                                jnp.asarray(self.xs), jnp.asarray(self.ys),
-                               keys, bkeys, fkeys, A, B_, C, Ts)
+                               keys, bkeys, fkeys, pkeys, A, B_, C, Ts)
             losses, accs = self._evaluate(ws)
             opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
                        if w_star is not None else None)

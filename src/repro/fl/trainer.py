@@ -12,7 +12,11 @@ Matches Sec. V's protocol:
   * optional wireless fault injection (``core.faults``): dropouts, erasures,
     deep fades and stragglers drawn from the counter-based FAULT stream
     (bit-shared with the JAX engine), with graceful-degradation policies
-    applied to the gradients before the aggregation scheme runs.
+    applied to the gradients before the aggregation scheme runs,
+  * optional partial participation (``core.participation``): Bernoulli
+    client sampling with static inclusion probabilities drawn from the
+    counter-based PARTICIPATE stream (bit-shared with the JAX engine),
+    payloads scaled by the uniform inverse propensity N/S.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..core import participation as participation_lib
 from ..core import rngstream
 from ..core.baselines import Aggregator
 from ..core.channel import Deployment, FadingProcess
@@ -50,7 +55,10 @@ class FLTrainer:
                  eta: float, *, project_radius: Optional[float] = None,
                  batch_size: Optional[int] = None,
                  payload_dtype: str = "f32",
-                 fault: Optional[FaultSpec] = None):
+                 fault: Optional[FaultSpec] = None,
+                 clients_per_round: Optional[int] = None,
+                 participation: str = "uniform",
+                 participation_probs=None):
         if payload_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
@@ -65,6 +73,12 @@ class FLTrainer:
         # the exact pre-fault code path (bit-identical trajectories) and
         # hit the same engine cache entry as a no-fault trainer
         self.fault = fault if fault is not None and fault.enabled else None
+        # same normalization for client sampling: clients_per_round=None
+        # -> None (strict no-op); otherwise the shared validated config
+        # (core.participation) both backends consume bit-for-bit
+        self.participation = participation_lib.resolve(
+            clients_per_round, participation, participation_probs,
+            n_devices=deployment.n_devices, lambdas=deployment.lambdas)
         self._engine = None
         # stack device data once whenever sizes allow: (N, n, feat). The
         # stacked view serves the full-batch path AND the counter-based
@@ -147,12 +161,18 @@ class FLTrainer:
                         or self._engine.project_radius != self.project_radius
                         or self._engine.batch_size != bs
                         or self._engine.payload_dtype != self.payload_dtype
-                        or self._engine.fault != self.fault):
+                        or self._engine.fault != self.fault
+                        or self._engine.participation != self.participation):
+                    part = self.participation
                     self._engine = FLEngine(
                         self.task, self.ds, self.dep, self.eta,
                         project_radius=self.project_radius,
                         batch_size=bs, payload_dtype=self.payload_dtype,
-                        fault=self.fault)
+                        fault=self.fault,
+                        clients_per_round=(part.clients if part else None),
+                        participation=(part.policy if part else "uniform"),
+                        participation_probs=(part.probs_array()
+                                             if part else None))
                 return self._engine.run(aggregator, rounds=rounds,
                                         trials=trials, eval_every=eval_every,
                                         seed=seed, w_star=w_star,
@@ -186,6 +206,12 @@ class FLTrainer:
             q_surv = survival_prob(fault, self.dep.lambdas)
             straggler_mult = float(fault.straggler_mult)
             deadline = fault.deadline_s
+        # client sampling (counter-based PARTICIPATE stream, shared
+        # bit-for-bit with the JAX engine); probabilities are static
+        part = self.participation
+        if part is not None:
+            part_probs = part.probs_array()
+            part_scale = float(part.scale)
 
         for trial in range(trials):
             rng = np.random.default_rng((seed, trial, 17))
@@ -255,6 +281,16 @@ class FLTrainer:
                                                     y_b[None])[0]
                              for x_b, y_b in zip(bx, by)])
                 h = fading.sample(t)
+                # client sampling: Bernoulli cohort + uniform inverse
+                # propensity N/S, applied BEFORE the fault layer (same
+                # ordering as the engine scan: payload cast ->
+                # participation -> fault policy -> dither)
+                if part is not None:
+                    up = rngstream.participation_block_np(
+                        seed, trial, t, self.dep.n_devices)
+                    chi = up < part_probs
+                    grads = grads * (chi.astype(np.float64)
+                                     * part_scale)[:, None]
                 # graceful degradation: transform the gradients BEFORE the
                 # aggregation scheme sees them (same ordering as the engine
                 # scan: payload cast -> fault policy -> dither), so every

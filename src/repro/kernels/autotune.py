@@ -44,6 +44,11 @@ MEASURE_ROWS = 8192
 _REPS = 2
 
 _cache: dict = {}
+# Bound on distinct (kind, rows, dtype, backend) winners kept live. Far
+# above any real workload's shape diversity, but a sweep that walks many
+# payload sizes can no longer grow the memo without bound; eviction is
+# LRU-oldest-only so hot tiles survive (never a full clear).
+_CACHE_MAX = 1024
 measure_count = 0  # total measurement sweeps run (test hook)
 
 
@@ -90,8 +95,9 @@ def choose_block_rows(kind: str, rows: int, dtype, bench=None) -> int:
         return DEFAULT_BLOCK_ROWS
     dtype = jax.dtypes.canonicalize_dtype(dtype)
     key = (kind, int(rows), str(dtype), jax.default_backend())
-    hit = _cache.get(key)
+    hit = _cache.pop(key, None)
     if hit is not None:
+        _cache[key] = hit          # refresh LRU recency
         return hit
     global measure_count
     measure_count += 1
@@ -105,5 +111,7 @@ def choose_block_rows(kind: str, rows: int, dtype, bench=None) -> int:
         t = _measure(bench, br)
         if t < best_t:
             best, best_t = br, t
+    if len(_cache) >= _CACHE_MAX:
+        _cache.pop(next(iter(_cache)))
     _cache[key] = best
     return best

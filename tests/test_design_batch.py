@@ -15,6 +15,15 @@ from repro.core import digital_design, ota_design
 
 PARITY_RTOL = 1e-3
 
+# The SciPy SCA oracle must run clean: re-anchored starts are clipped into
+# the SLSQP box (core.sca.solve_surrogate) and the solver's internal
+# mid-step clipping is scoped out at the source, so the once-ubiquitous
+# "Values in x were outside bounds" RuntimeWarning escaping these solves is
+# a regression. Promote exactly that message to an error here, on top of
+# the repo-wide RuntimeWarning-as-error policy in pyproject.toml.
+pytestmark = pytest.mark.filterwarnings(
+    "error:Values in x were outside bounds:RuntimeWarning")
+
 
 @pytest.fixture(scope="module")
 def deployment():
