@@ -22,7 +22,7 @@ def _registry() -> dict:
     from . import (fig2_ota_sc, fig2_digital_sc, fig3_nonconvex, roofline,
                    kernel_bench, theorem_validation, engine_bench,
                    design_bench, sweep_snr_het, sweep_fault,
-                   sweep_participation)
+                   sweep_participation, sweep_async)
     return {
         "kernel_bench": kernel_bench,
         "roofline": roofline,
@@ -50,6 +50,7 @@ def _registry() -> dict:
         "sweep_snr_het": sweep_snr_het,
         "sweep_fault": sweep_fault,
         "sweep_participation": sweep_participation,
+        "sweep_async": sweep_async,
     }
 
 

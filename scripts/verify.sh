@@ -34,7 +34,11 @@
 # partial-participation sweep smoke: the N x S x policy grid of
 # `benchmarks/sweep_participation.py --smoke`, which fails unless the
 # co-designed sampling distribution strictly beats uniform zero-bias
-# sampling at equal expected airtime on >= 1 heterogeneous cell.
+# sampling at equal expected airtime on >= 1 heterogeneous cell, and the
+# buffered-async sweep smoke: `benchmarks/sweep_async.py --smoke`, which
+# fails unless the staleness-priced designed-async configuration beats
+# BOTH naive-async and synchronous-with-deadline at equal wall-clock, and
+# the K=1 Theorem-1 bound rows all hold.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -100,19 +104,25 @@ rm -rf "experiments/results/scenarios/sweep_participation"
 python -m benchmarks.sweep_participation --smoke --jobs 2
 partsweep_status=$?
 
+echo "== async sweep smoke (designed vs naive vs sync-deadline, --jobs 2) =="
+rm -rf "experiments/results/scenarios/sweep_async"*
+python -m benchmarks.sweep_async --smoke --jobs 2
+asyncsweep_status=$?
+
 if [ "$test_status" -ne 0 ] || [ "$bench_status" -ne 0 ] \
         || [ "$minibatch_status" -ne 0 ] || [ "$design_status" -ne 0 ] \
         || [ "$mem_status" -ne 0 ] || [ "$fastrng_status" -ne 0 ] \
         || [ "$scale_status" -ne 0 ] || [ "$payload_status" -ne 0 ] \
         || [ "$sweep_status" -ne 0 ] || [ "$fault_status" -ne 0 ] \
         || [ "$faultsweep_status" -ne 0 ] \
-        || [ "$partsweep_status" -ne 0 ]; then
+        || [ "$partsweep_status" -ne 0 ] \
+        || [ "$asyncsweep_status" -ne 0 ]; then
     echo "verify FAILED (tests=$test_status bench=$bench_status" \
          "minibatch=$minibatch_status design=$design_status" \
          "mem=$mem_status fastrng=$fastrng_status scale=$scale_status" \
          "payload=$payload_status sweep=$sweep_status" \
          "fault=$fault_status faultsweep=$faultsweep_status" \
-         "partsweep=$partsweep_status)" >&2
+         "partsweep=$partsweep_status asyncsweep=$asyncsweep_status)" >&2
     exit 1
 fi
 echo "verify OK"

@@ -15,7 +15,7 @@ from typing import Optional
 
 import numpy as np
 
-from ..core import digital_design, ota_design, sca_jax
+from ..core import async_fl, digital_design, ota_design, sca_jax
 from ..core.bounds import ObjectiveWeights
 from ..core.channel import Deployment, make_deployment
 from ..core.faults import effective_lambdas, survival_prob
@@ -214,6 +214,39 @@ class CellContext:
             [self.weights.omega_var], [self.weights.omega_bias])
         return pi[0]
 
+    def async_weights(self, agg) -> Optional[np.ndarray]:
+        """Staleness-aware designed aggregation weights v, or None.
+
+        Only ``run.mode == "async"`` with ``async_.weighting ==
+        "designed"`` solves anything: v comes from the bound-driven
+        capped-simplex solver (``core.sca_jax.solve_async_batch``) at
+        this cell's (omega_var, omega_bias) operating point, pricing the
+        scheme's own participation levels p (uniform 1/N when the scheme
+        carries no wireless design), the stationary delivery weights
+        c_m = r_m * E[delta^S | in window] of the arrival model
+        (``core.async_fl.delivery_weight``), and the expected staleness
+        that inflates each device's variance contribution
+        (``core.async_fl.expected_staleness``). "uniform" keeps v = 1
+        without a solver (resolved inside ``core.async_fl``).
+        """
+        run = self.scenario.run
+        asp = self.scenario.async_
+        if run.mode != "async" or asp.weighting != "designed":
+            return None
+        lam = self.dep.lambdas
+        n = lam.shape[0]
+        params = getattr(agg, "params", None)
+        if params is not None and hasattr(params, "participation_levels"):
+            p = np.asarray(params.participation_levels(lam), np.float64)
+        else:
+            p = np.full(n, 1.0 / n)
+        c = async_fl.delivery_weight(asp, n)
+        sbar = async_fl.expected_staleness(asp, n)
+        v, _ = sca_jax.solve_async_batch(
+            p[None], c[None], sbar[None],
+            [self.weights.omega_var], [self.weights.omega_bias])
+        return v[0]
+
 
 class _Memo:
     """Per-execute cache of expensive sub-materializations.
@@ -265,7 +298,8 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
                  seed=5, time_budget_s=None, etas=(1.0, 0.5, 0.25, 0.1),
                  backend="auto", batch_size=None, rng="replay",
                  payload_dtype="f32", fault=None, clients_per_round=None,
-                 participation="uniform", participation_probs=None):
+                 participation="uniform", participation_probs=None,
+                 mode="sync", async_spec=None, async_weights=None):
     """Per-scheme step-size grid search (paper Sec. V: 'step sizes for all
     schemes are tuned via a small grid search'), then the full MC run.
 
@@ -284,7 +318,9 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
                            payload_dtype=payload_dtype, fault=fault,
                            clients_per_round=clients_per_round,
                            participation=participation,
-                           participation_probs=participation_probs)
+                           participation_probs=participation_probs,
+                           mode=mode, async_spec=async_spec,
+                           async_weights=async_weights)
             probe = tr.run(agg, rounds=rounds, trials=1,
                            eval_every=max(rounds // 4, 1), seed=seed + 91,
                            time_budget_s=time_budget_s, backend=backend,
@@ -296,7 +332,9 @@ def tune_and_run(task, ds, dep, agg, *, eta_max, rounds, trials, eval_every,
                    payload_dtype=payload_dtype, fault=fault,
                    clients_per_round=clients_per_round,
                    participation=participation,
-                   participation_probs=participation_probs)
+                   participation_probs=participation_probs,
+                   mode=mode, async_spec=async_spec,
+                   async_weights=async_weights)
     log = tr.run(agg, rounds=rounds, trials=trials, eval_every=eval_every,
                  seed=seed, time_budget_s=time_budget_s, backend=backend,
                  rng=rng)
@@ -316,4 +354,6 @@ def run_cell_scheme(ctx: CellContext, agg):
                         fault=ctx.scenario.fault,
                         clients_per_round=r.clients_per_round,
                         participation=r.participation,
-                        participation_probs=ctx.participation_probs(agg))
+                        participation_probs=ctx.participation_probs(agg),
+                        mode=r.mode, async_spec=ctx.scenario.async_,
+                        async_weights=ctx.async_weights(agg))

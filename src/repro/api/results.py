@@ -38,7 +38,10 @@ import numpy as np
 #: "fault" block to every spec dict.
 #: v6: RunSpec gained ``clients_per_round`` + ``participation``
 #: (partial-participation client sampling, ``core.participation``).
-SCHEMA_VERSION = 6
+#: v7: RunSpec gained ``mode`` ("sync"|"async") and ScenarioSpec gained
+#: ``async_`` (``core.async_fl.AsyncSpec`` — buffered-asynchronous
+#: aggregation with staleness priced as structured bias).
+SCHEMA_VERSION = 7
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
 DEFAULT_RESULTS_ROOT = Path(os.environ.get(

@@ -8,6 +8,7 @@ pre-refactor trajectories. ``REGISTRY`` backs the CLI
 """
 from __future__ import annotations
 
+from ..core.async_fl import AsyncSpec
 from ..core.channel import WirelessConfig
 from ..core.faults import FaultSpec
 from .spec import (DataSpec, DesignPolicy, RunSpec, ScenarioSpec, SweepSpec,
@@ -192,6 +193,69 @@ def sweep_participation(quick: bool = True, n_devices: int = 50) -> SweepSpec:
     return SweepSpec(name="sweep_participation", base=base, axes=axes)
 
 
+def sweep_async(quick: bool = True, n_devices: int = 10) -> SweepSpec:
+    """Buffered-async FL: arrival-het x buffer x discount grid
+    (``core.async_fl``), staleness-priced design point.
+
+    Every cell runs ``run.mode="async"``: devices deliver their round-t
+    gradient with heterogeneous per-round arrival probabilities r_m
+    (``async_.arrival_rate`` spread by ``async_.rate_heterogeneity``;
+    each device holds ONE class, so a slow-arriving device starves its
+    class — a structured bias), late updates land from a last-K
+    staleness buffer (``async_.buffer_rounds``) discounted by
+    ``delta^staleness`` (``async_.staleness_discount``), and the PS
+    applies the bound-driven aggregation weights v from
+    ``core.sca_jax.solve_async_batch`` (``async_.weighting="designed"``)
+    that re-balance the effective participation p_m * c_m * v_m the
+    Theorem-1/2 bound prices (``bounds.async_effective_participation``).
+    ``benchmarks/sweep_async.py`` derives the naive-async
+    (uniform v, delta=1) and synchronous-with-deadline comparison sweeps
+    from this base and reduces all three to the equal-wall-clock
+    domination figure.
+    """
+    base = ScenarioSpec(
+        name="sweep_async",
+        data=DataSpec(n_train_per_class=80 if quick else 600,
+                      n_test_per_class=30 if quick else 200,
+                      samples_per_device=60 if quick else 120),
+        wireless=WirelessConfig(n_devices=8 if quick else n_devices,
+                                seed=1, pl_exponent=2.2, tx_power_dbm=10.0),
+        design=DesignPolicy(kappa=3.0 if quick else None),
+        run=RunSpec(rounds=24 if quick else 100, trials=2,
+                    eval_every=6 if quick else 10,
+                    etas=(1.0,) if quick else (1.0, 0.25),
+                    mode="async"),
+        async_=AsyncSpec(buffer_rounds=4, arrival_rate=0.55,
+                         rate_heterogeneity=3.0, staleness_discount=0.8,
+                         on_missing="zero", weighting="designed"),
+        schemes=("proposed_ota",))
+    if quick:
+        axes = {"async_.rate_heterogeneity": (1.0, 3.0),
+                "async_.buffer_rounds": (2, 5),
+                "async_.staleness_discount": (0.7, 1.0)}
+    else:
+        axes = {"async_.rate_heterogeneity": (0.5, 1.5, 3.0),
+                "async_.buffer_rounds": (2, 4, 8),
+                "async_.staleness_discount": (0.6, 0.8, 1.0)}
+    return SweepSpec(name="sweep_async", base=base, axes=axes)
+
+
+def fig2_batch(quick: bool = True, n_devices: int = 50) -> SweepSpec:
+    """Fig. 2a/2b protocol over a ``run.batch_size`` grid (SGD scale).
+
+    The paper's Monte-Carlo uses full-batch device gradients; this sweep
+    re-runs the Fig.-2 OTA comparison with minibatch SGD at increasing
+    batch sizes (None = full batch) to show the designed bias-variance
+    trade-off is preserved under gradient noise — one ``cli run
+    fig2_batch`` away instead of a hand-rolled loop.
+    """
+    base = fig2_ota_sc(quick=quick, n_devices=n_devices).replace(
+        name="fig2_batch")
+    sizes = (16, 64, None) if quick else (16, 64, 256, None)
+    return SweepSpec(name="fig2_batch", base=base,
+                     axes={"run.batch_size": sizes})
+
+
 REGISTRY = {
     "fig2_ota_sc": fig2_ota_sc,
     "fig2_digital_sc": fig2_digital_sc,
@@ -200,6 +264,8 @@ REGISTRY = {
     "sweep_smoke": sweep_smoke,
     "sweep_fault": sweep_fault,
     "sweep_participation": sweep_participation,
+    "sweep_async": sweep_async,
+    "fig2_batch": fig2_batch,
 }
 
 

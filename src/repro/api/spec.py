@@ -17,8 +17,12 @@ bf16 uplink payloads), ``fault.dropout_prob`` / ``fault.deep_fade_thresh``
 / ``fault.erasure_prob`` / ``fault.straggler_prob`` / ``fault.deadline_s``
 (wireless fault injection, ``core.faults``),
 ``run.clients_per_round`` / ``run.participation`` (per-round client
-sampling, ``core.participation``), ... — and expands to the cross
-product of override-applied scenarios (``points()``).
+sampling, ``core.participation``), ``run.mode`` /
+``async_.buffer_rounds`` / ``async_.arrival_rate`` /
+``async_.rate_heterogeneity`` / ``async_.staleness_discount`` /
+``async_.weighting`` (buffered-asynchronous execution,
+``core.async_fl``), ... — and expands to the cross product of
+override-applied scenarios (``points()``).
 """
 from __future__ import annotations
 
@@ -28,6 +32,7 @@ import itertools
 import json
 from typing import Optional
 
+from ..core.async_fl import MODES, AsyncSpec
 from ..core.channel import WirelessConfig
 from ..core.faults import FaultSpec
 from .results import SCHEMA_VERSION, json_default
@@ -98,7 +103,13 @@ class RunSpec:
     rng: str = "replay"                  # "replay" (oracle-exact) | "fast"
     payload_dtype: str = "f32"           # uplink gradient payload: f32|bf16
     clients_per_round: Optional[int] = None  # S: partial participation (off)
-    participation: str = "uniform"       # sampling: uniform|channel|designed
+    participation: str = "uniform"       # uniform|channel|designed|loss|datasize
+    mode: str = "sync"                   # "sync" | "async" (core.async_fl)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"run.mode must be one of {MODES}, got {self.mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +127,7 @@ class ScenarioSpec:
     design: DesignPolicy = DesignPolicy()
     run: RunSpec = RunSpec()
     fault: FaultSpec = FaultSpec()       # wireless fault injection (off)
+    async_: AsyncSpec = AsyncSpec()      # buffered-async knobs (run.mode)
     schemes: tuple = ("suite:fig2_ota",)
 
     @property
@@ -140,6 +152,10 @@ class ScenarioSpec:
             run=RunSpec(**run),
             # pre-v5 dicts have no "fault" key: default to disabled
             fault=FaultSpec(**d["fault"]) if d.get("fault") else FaultSpec(),
+            # pre-v7 dicts have no "async_" key: default knobs (run.mode
+            # also defaults to "sync" via RunSpec, keeping them inert)
+            async_=(AsyncSpec(**d["async_"]) if d.get("async_")
+                    else AsyncSpec()),
             schemes=tuple(d["schemes"]))
 
     def replace(self, **kw) -> "ScenarioSpec":

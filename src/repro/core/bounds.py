@@ -55,6 +55,10 @@ def effective_participation(p: np.ndarray, q: np.ndarray,
         participation *level* keeps factor 1; the staleness of the
         gradient itself is a time-correlated bias outside the bound's
         model (see ``core.faults`` — the empirical comparison point).
+        The buffered-async mode (``core.async_fl``) is the regime where
+        staleness *is* priced: its stationary staleness distribution
+        tilts the levels by a static factor, see
+        :func:`async_effective_participation`.
 
     Sampling factor: included payloads are scaled by the uniform inverse
     propensity N/S, so device m's level tilts by ``pi_m * N / S``
@@ -74,6 +78,38 @@ def effective_participation(p: np.ndarray, q: np.ndarray,
         pi = np.asarray(pi, dtype=np.float64)
         eff = eff * pi * (pi.shape[0] / np.sum(pi))
     return eff
+
+
+def async_effective_participation(p: np.ndarray, c: np.ndarray,
+                                  weights=None) -> np.ndarray:
+    """Participation levels under buffered-async delivery.
+
+    ``p`` are the (possibly fault/sampling-tilted) participation levels,
+    ``c`` the per-device async delivery weights
+    ``c_m = E[delta^S ; delivered]`` (``core.async_fl.delivery_weight``)
+    and ``weights`` the optional PS per-device weights v (uniform 1 when
+    None). The async layer scales device m's payload by
+    ``v_m * N / sum(c v)`` — expected delivered mass normalized to N —
+    so the *stationary* staleness distribution shifts the levels to
+
+        e_m = p_m * c_m * v_m * N / sum_j(c_j v_j),
+
+    a static, structured tilt the Theorem-1/2 bias term prices via
+    :func:`bias_sum` on the levels returned here, composing with the
+    fault (q) and sampling (pi) factors of
+    :func:`effective_participation` that already shaped ``p``.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    n = p.shape[0]
+    v = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    return p * c * v * (n / float(np.sum(c * v)))
+
+
+def async_bias_sum(p: np.ndarray, c: np.ndarray, weights=None) -> float:
+    """:func:`bias_sum` of the async effective levels — the model-bias
+    magnitude the buffered-async mode's staleness distribution induces."""
+    return bias_sum(async_effective_participation(p, c, weights))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,9 +35,13 @@ schemes inherit it):
     *structured participation bias* the Sec.-IV bound prices via
     ``bounds.effective_participation`` / ``bounds.bias_sum``.
   * ``"stale"`` — the PS reuses the device's last received gradient
-    (staleness-as-bias, the ROADMAP item-3 knob): same participation
-    level, but a time-correlated gradient bias the bound does not model —
-    the empirical comparison point.
+    (staleness-as-bias): same participation level, but a time-correlated
+    gradient bias the bound does not model — the empirical comparison
+    point. Both backends route the replay through the single
+    last-gradient code path ``core.async_fl.stale_replace``, shared with
+    the buffered-async subsystem that generalizes this policy to a
+    last-K staleness buffer with a *priced* stationary staleness
+    distribution (``run.mode="async"``, ``core.async_fl``).
 
 Faulted devices keep their reserved TDMA slots / OTA symbols, so
 scheme-side latency accounting is unchanged (erasures pay for airtime

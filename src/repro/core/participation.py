@@ -33,6 +33,18 @@ Policies (``POLICIES``):
     ``ota_design.design_ota_participation`` /
     ``digital_design.design_digital_participation``); requires explicit
     probabilities at the trainer/engine layer.
+  * ``"datasize"`` — pi proportional to the device dataset sizes |D_m|
+    (FedAvg's classic importance weighting recast as a sampling tilt);
+    the trainer/engine compute the sizes from their dataset
+    (:func:`datasize_weights`).
+  * ``"loss"``     — pi proportional to each device's local loss at the
+    initial model (loss-based importance sampling: hard devices sampled
+    more); the weights are a deterministic function of (task, dataset)
+    (:func:`loss_weights`), so both backends resolve identical pi bits.
+
+Both new policies are just another static capped-simplex pi: the
+Theorem-1/2 bound prices their sampling tilt through
+``bounds.effective_participation`` exactly like "channel".
 
 Arbitrary static probabilities are supported directly: pass
 ``participation_probs`` (any (N,) vector on the capped simplex) to the
@@ -51,7 +63,11 @@ from typing import Optional
 
 import numpy as np
 
-POLICIES = ("uniform", "channel", "designed")
+POLICIES = ("uniform", "channel", "designed", "loss", "datasize")
+
+#: Policies whose pi needs per-device weights the trainer/engine derive
+#: from their task/dataset (:func:`policy_weights`).
+WEIGHTED_POLICIES = ("loss", "datasize")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,16 +139,51 @@ def capped_proportional(weights: np.ndarray, clients: int,
     return np.clip(pi, 0.0, 1.0)
 
 
+def datasize_weights(dataset) -> np.ndarray:
+    """(N,) float64 device dataset sizes |D_m| — the "datasize" policy's
+    proportionality weights."""
+    return np.asarray([float(len(d)) for d in dataset.devices], np.float64)
+
+
+def loss_weights(task, dataset) -> np.ndarray:
+    """(N,) float64 per-device local loss at the initial model — the
+    "loss" policy's proportionality weights.
+
+    ``task.init_params()`` is deterministic, so the weights (and the pi
+    they resolve to) are identical bits on both backends.
+    """
+    w0 = task.init_params()
+    return np.asarray(
+        [float(task.global_loss(w0, d.x, d.y)) for d in dataset.devices],
+        np.float64)
+
+
+def policy_weights(policy: str, task=None, dataset=None):
+    """The per-device weights a :data:`WEIGHTED_POLICIES` policy scales
+    onto the capped simplex, or None for the policies that need none."""
+    if policy not in WEIGHTED_POLICIES:
+        return None
+    if task is None or dataset is None:
+        raise ValueError(
+            f"participation={policy!r} needs the task and dataset to "
+            "derive its sampling weights")
+    if policy == "datasize":
+        return datasize_weights(dataset)
+    return loss_weights(task, dataset)
+
+
 def resolve(clients_per_round: Optional[int], policy: str = "uniform",
-            probs=None, *, n_devices: int,
-            lambdas=None) -> Optional[ResolvedParticipation]:
+            probs=None, *, n_devices: int, lambdas=None,
+            weights=None) -> Optional[ResolvedParticipation]:
     """Normalize the (clients, policy, probs) knobs both backends take.
 
     Returns None when ``clients_per_round`` is None (the strict no-op);
     otherwise a validated :class:`ResolvedParticipation`. Explicit
     ``probs`` override the policy's construction (that is how "designed"
     probabilities reach the trainer); the "channel" policy needs
-    ``lambdas``.
+    ``lambdas``, the "loss"/"datasize" policies need ``weights``
+    (:func:`policy_weights` — the trainer/engine derive them from their
+    task/dataset).
     """
     if clients_per_round is None:
         if probs is not None:
@@ -168,6 +219,13 @@ def resolve(clients_per_round: Optional[int], policy: str = "uniform",
             raise ValueError(
                 "participation='channel' needs the deployment lambdas")
         pi = capped_proportional(np.asarray(lambdas, np.float64), s)
+    elif policy in WEIGHTED_POLICIES:
+        if weights is None:
+            raise ValueError(
+                f"participation={policy!r} needs its per-device weights "
+                "(policy_weights(policy, task, dataset) — the "
+                "trainer/engine derive them from their task/dataset)")
+        pi = capped_proportional(np.asarray(weights, np.float64), s)
     else:   # "designed" without explicit probabilities
         raise ValueError(
             "participation='designed' needs explicit participation_probs "

@@ -96,6 +96,13 @@ FAULT_TAG = 53
 #: backends.
 PARTICIPATE_TAG = 59
 
+#: Asynchronous-arrival stream (``core.async_fl``): the per-round delivery /
+#: staleness uniforms of the buffered-async execution mode (one (2, N)
+#: block per round). Counter-based in BOTH rng modes (like FAULT and
+#: PARTICIPATE), so arrival realizations are bit-identical across
+#: rng="replay"/"fast" and across the NumPy/JAX backends.
+ARRIVAL_TAG = 61
+
 
 #: Bound on the per-stream (seed, trial) -> base-key memos below.
 _KEY_CACHE_MAX = 256
@@ -245,6 +252,42 @@ def participation_block_np(seed: int, trial: int, t: int,
     key = _cached_base_key(_PARTICIPATE_KEY_CACHE, seed, trial,
                            participate_base_key)
     return np.asarray(participation_block(key, t, n), dtype=np.float64)
+
+
+def arrival_base_key(seed: int, trial: int) -> jax.Array:
+    """Per-trial base key for the async-arrival stream (threefry)."""
+    return stream_base_key(seed, trial, ARRIVAL_TAG)
+
+
+def arrival_block(key: jax.Array, t, n: int) -> jnp.ndarray:
+    """(2, n) float32 arrival uniforms for round ``t`` (jit/scan-traceable).
+
+    Row 0 drives the per-round delivery event (device ``m`` delivers an
+    update this round iff ``block[0, m] < r_m`` for its static per-round
+    completion probability), row 1 the staleness draw of the delivered
+    update (compared against the device's precomputed truncated-geometric
+    CDF thresholds, ``core.async_fl``). ``key`` is the trial's
+    :func:`arrival_base_key`; ``t`` may be a traced scalar, so the engine
+    folds the round index inside ``lax.scan``. Drawn in float32; both
+    consumers widen to float64 (exact, the fault-block pattern) so they
+    compare the identical value against the float64 rate/CDF tables.
+    """
+    return jax.random.uniform(jax.random.fold_in(key, t), (2, n),
+                              dtype=jnp.float32)
+
+
+_ARRIVAL_KEY_CACHE: dict = {}
+
+
+def arrival_block_np(seed: int, trial: int, t: int, n: int) -> np.ndarray:
+    """Oracle view of :func:`arrival_block`: (2, n) float64 numpy array.
+
+    The base key is memoized per (seed, trial) (bounded LRU) so the
+    per-round cost in the Python training loop is one fold_in + uniform
+    dispatch (the fault-block pattern).
+    """
+    key = _cached_base_key(_ARRIVAL_KEY_CACHE, seed, trial, arrival_base_key)
+    return np.asarray(arrival_block(key, t, n), dtype=np.float64)
 
 
 def batch_base_key(seed: int, trial: int) -> jax.Array:

@@ -218,6 +218,110 @@ def solve_participation_batch(p, q, clients, omega_var, omega_bias):
         return np.asarray(pi), np.asarray(obj)
 
 
+# ---------------------------------------------------- async co-design
+
+def _solve_async_one(p, c, sbar, wv, wb):
+    """One buffered-async design point: PS per-device weights v.
+
+    Minimizes the bound-shaped objective over {sum v = N,
+    v_min <= v <= N}: with the *async effective participation levels*
+    ``e = p * c * v * (N / sum(c v))`` — exactly
+    ``bounds.async_effective_participation``, where ``c`` is the per-device
+    staleness-discounted delivery weight
+    (``core.async_fl.delivery_weight``) —
+
+        J(v) = omega_bias * sum (e - 1/N)^2            (priced stale bias)
+             + omega_var * (1/(sum e)^2               (noise inflation)
+                            + sum e^2 * sbar)         (staleness drift)
+
+    The first variance piece is the participation solver's delivered-mass
+    noise proxy; the second weights each device's squared effective level
+    by its expected staleness ``sbar_m`` (E[S | delivered],
+    ``core.async_fl.expected_staleness``) — a staleness-S gradient drifts
+    from the fresh one by O(S) optimization progress, so leaning on
+    chronically-stale devices injects drift variance. The solver therefore
+    trades up-weighting slow devices (leveling e at 1/N — killing the
+    structured staleness bias) against the drift noise of doing so, the
+    same bias-variance structure as (15a)/(17a). Three anchors (uniform,
+    inverse delivery weight, inverse expected staleness) feed projected
+    Adam stages at decreasing step sizes; best feasible iterate wins.
+    """
+    n = p.shape[0]
+    cw = jnp.maximum(c, 1e-30)
+
+    def obj(v):
+        e = p * cw * v * (n / jnp.sum(cw * v))
+        return (wb * jnp.sum((e - 1.0 / n) ** 2)
+                + wv * (1.0 / jnp.sum(e) ** 2 + jnp.sum(e ** 2 * sbar)))
+
+    proj = lambda x: capped_simplex_projection_jax(x, 1.0 * n, hi=1.0 * n)
+    inv_c = 1.0 / cw
+    inv_s = 1.0 / (1.0 + sbar)
+    anchors = jnp.stack([
+        jnp.ones((n,)),
+        proj(inv_c * (n / jnp.sum(inv_c))),
+        proj(inv_s * (n / jnp.sum(inv_s))),
+    ])
+    vg = jax.value_and_grad(obj)
+    scale = 1.0 / jnp.maximum(jnp.abs(obj(anchors[0])), 1e-30)
+
+    def run_anchor(x0):
+        def stage(carry, lr):
+            x, bx, bf = carry
+
+            def step(inner, i):
+                x, m, v = inner
+                f, g = vg(x)
+                g = g * scale
+                m = _B1 * m + (1.0 - _B1) * g
+                v = _B2 * v + (1.0 - _B2) * g * g
+                mhat = m / (1.0 - _B1 ** (i + 1))
+                vhat = v / (1.0 - _B2 ** (i + 1))
+                x = proj(x - lr * mhat / (jnp.sqrt(vhat) + _ADAM_EPS))
+                return (x, m, v), None
+
+            (x, _, _), _ = jax.lax.scan(
+                step, (x, jnp.zeros_like(x), jnp.zeros_like(x)),
+                jnp.arange(_PART_STEPS))
+            f = obj(x)
+            bx = jnp.where(f < bf, x, bx)
+            bf = jnp.minimum(f, bf)
+            return (bx, bx, bf), None           # re-anchor at the best
+
+        (_, bx, bf), _ = jax.lax.scan(stage, (x0, x0, obj(x0)),
+                                      jnp.asarray(_PART_LRS))
+        return bx, bf
+
+    bxs, bfs = jax.vmap(run_anchor)(anchors)
+    i = jnp.argmin(bfs)
+    return bxs[i], bfs[i]
+
+
+@functools.lru_cache(maxsize=None)
+def _async_solver_jit():
+    return jax.jit(jax.vmap(_solve_async_one))
+
+
+def solve_async_batch(p, c, sbar, omega_var, omega_bias):
+    """Solve a batch of buffered-async weight design problems in one jit.
+
+    Args (leading batch axis B; N devices): p (B, N) effective scheme
+    participation levels (fault/sampling tilts folded in), c (B, N) async
+    delivery weights (``core.async_fl.delivery_weight``), sbar (B, N)
+    expected staleness (``core.async_fl.expected_staleness``), omega_var /
+    omega_bias (B,) the cell's bound weights.
+
+    Returns:
+      (v, objectives): (B, N) float64 PS per-device weights on
+      {sum v = N, v <= N} and (B,) objective values.
+    """
+    with enable_x64():
+        args = [jnp.asarray(np.asarray(a, dtype=np.float64))
+                for a in (p, c, sbar, omega_var, omega_bias)]
+        v, obj = _async_solver_jit()(*args)
+        return np.asarray(v), np.asarray(obj)
+
+
 # ------------------------------------------------------------- OTA (15)
 
 def _solve_ota_one(lambdas, dim, g_max, e_s, n0, wv, wb, s2, anchors):

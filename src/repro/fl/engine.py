@@ -71,6 +71,18 @@ ones carry the uniform inverse-propensity scale N/S, upstream of the
 fault layer and every scheme's combiner. ``clients_per_round=None``
 traces the exact pre-participation program (bit-identical runs).
 
+Buffered-async mode (``core.async_fl``, ``mode="async"``) runs in-scan as
+well: the scan carries a (K, N, d) last-K gradient buffer, one (2, N)
+counter-based uniform block per round (ARRIVAL_TAG — bit-identical across
+both rng modes and both backends) draws each device's delivery event and
+staleness against precomputed float64 rate/CDF tables, and the delivered
+payload ``delta^S * v_m * (N/sum(cv)) * g_m(w_{t-S})`` replaces the fresh
+gradient upstream of the fault layer and every scheme's combiner
+(missing devices zero-fill or replay their last delivered payload through
+``async_fl.stale_replace`` — the same code path as
+``fault.on_missing="stale"``). ``mode="sync"`` (default) traces the exact
+pre-async program (bit-identical runs).
+
 Time budgets run in-scan: cumulative wall-clock rides in the scan carry,
 every round is masked by ``t_wall < budget`` (``jnp.where``), and each eval
 segment reports the last *live* model state — replicating the trainer's
@@ -97,6 +109,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from ..core import async_fl
 from ..core import baselines as B
 from ..core import participation as participation_lib
 from ..core import rngstream
@@ -536,7 +549,10 @@ class FLEngine:
                  fault: Optional[FaultSpec] = None,
                  clients_per_round: Optional[int] = None,
                  participation: str = "uniform",
-                 participation_probs=None):
+                 participation_probs=None,
+                 mode: str = "sync",
+                 async_spec: Optional[async_fl.AsyncSpec] = None,
+                 async_weights=None):
         if payload_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
@@ -553,10 +569,24 @@ class FLEngine:
         self.fault = fault if fault is not None and fault.enabled else None
         # clients_per_round=None likewise normalizes to None (strict
         # no-op); otherwise the validated sampling config is shared with
-        # the oracle bit-for-bit (core.participation)
+        # the oracle bit-for-bit (core.participation). The loss/datasize
+        # policies derive their capped-simplex weights from (task,
+        # dataset) — pure NumPy, identical bits on both backends.
+        part_weights = None
+        if (clients_per_round is not None and participation_probs is None
+                and participation in participation_lib.WEIGHTED_POLICIES):
+            part_weights = participation_lib.policy_weights(
+                participation, task, dataset)
         self.participation = participation_lib.resolve(
             clients_per_round, participation, participation_probs,
-            n_devices=deployment.n_devices, lambdas=deployment.lambdas)
+            n_devices=deployment.n_devices, lambdas=deployment.lambdas,
+            weights=part_weights)
+        # mode="sync" normalizes to None the same way: the scan traces
+        # the exact pre-async program (strict no-op). The resolved tables
+        # (rates/CDF/discounts/weights) are float64 tuples shared with
+        # the oracle bit-for-bit (core.async_fl).
+        self.async_ = async_fl.resolve(mode, async_spec,
+                                       deployment.n_devices, async_weights)
         sizes = tuple(len(d) for d in dataset.devices)
         if len(set(sizes)) == 1:
             self.device_sizes = None      # equal sizes: plain stacked arrays
@@ -627,7 +657,8 @@ class FLEngine:
         key = (self.task, trials, n_seg, eval_every, d, N,
                self.xs.shape, self.batch_size, self.device_sizes,
                self.use_kernel, self.shard_trials, rng_mode,
-               self.payload_dtype, self.fault, self.participation)
+               self.payload_dtype, self.fault, self.participation,
+               self.async_)
         if key in jagg._runner_cache:
             return jagg._runner_cache[key]
 
@@ -682,12 +713,28 @@ class FLEngine:
         if part is not None:
             part_probs = jnp.asarray(part.probs_array(), jnp.float64)
             part_scale = float(part.scale)
+        # buffered-async layer: trace-time static like the fault and
+        # participation layers — with mode="sync" (None) the scan below is
+        # the exact pre-async program (bit-identical runs). All tables are
+        # precomputed host-side float64, so the in-scan realization is
+        # exact comparisons/gathers only (bit-identical to the oracle).
+        asy = self.async_
+        amode = asy is not None
+        if amode:
+            a_stale = asy.on_missing == "stale"
+            a_k = asy.buffer_rounds
+            a_rates = jnp.asarray(asy.rates_array(), jnp.float64)
+            a_cdf = jnp.asarray(asy.cdf_array(), jnp.float64)
+            a_disc = jnp.asarray(asy.discounts_array(), jnp.float64)
+            a_pscale = jnp.asarray(asy.payload_scale_array(), jnp.float64)
+        else:
+            a_stale = False
 
         def trial_fn(w0, eta, radius, lat_div, budget, xs, ys, dkey, bkey,
-                     fkey, pkey, A, B_, C, Ts):
-            # dkey/bkey/fkey/pkey: scan-carried / closed-over per-trial
-            # dither, batch-index, fault- and participation-stream keys
-            # (counter-based in both modes).
+                     fkey, pkey, akey, A, B_, C, Ts):
+            # dkey/bkey/fkey/pkey/akey: scan-carried / closed-over
+            # per-trial dither, batch-index, fault-, participation- and
+            # arrival-stream keys (counter-based in both modes).
             # replay: A=H (n_seg, eval_every, N) complex, B_=Z
             # (n_seg, eval_every, dz), C=SEL (n_seg, eval_every, S) — host
             # precomputed tensors fed through the scan.
@@ -697,12 +744,19 @@ class FLEngine:
             # scan input. Same arity either way, so the vmap/shard_map
             # plumbing below is mode-blind.
             def step(carry, inp):
+                # fixed base carry + trace-time-static optional extras, in
+                # order: [async last-K buffer, async last-delivered
+                # payloads, fault "stale" last-received gradients]
+                w, t_wall, _, dkey, bkey = carry[:5]
+                ext = list(carry[5:])
+                if amode:
+                    a_buf = ext.pop(0)
+                    if a_stale:
+                        g_alast = ext.pop(0)
                 if stale:
                     # "stale" carries the last *received* per-device
                     # gradients so missing payloads replay them
-                    w, t_wall, _, dkey, bkey, g_stale = carry
-                else:
-                    w, t_wall, _, dkey, bkey = carry
+                    g_stale = ext.pop(0)
                 if fast:
                     t = inp
                     h = sample_fading_jax(A, t, lambdas)
@@ -755,6 +809,24 @@ class FLEngine:
                     up = rngstream.participation_block(pkey, t, N)
                     chi = up.astype(jnp.float64) < part_probs
                     g = g * (chi.astype(jnp.float64) * part_scale)[:, None]
+                if amode:
+                    # buffered-async delivery (counter-based ARRIVAL
+                    # stream, bit-identical across backends/rng modes):
+                    # the last-K buffer shifts, each device delivers a
+                    # staleness-S discounted payload drawn against the
+                    # precomputed rate/CDF tables, and missing devices
+                    # zero-fill or replay their last delivered payload —
+                    # applied upstream of the fault layer and the
+                    # scheme's combiner, like the layers around it
+                    ua = rngstream.arrival_block(akey, t, N)
+                    ua = ua.astype(jnp.float64)   # exact widen (x64 on)
+                    g, ok_a, a_buf = async_fl.async_round(
+                        g, a_buf, ua, a_rates, a_cdf, a_disc, a_pscale)
+                    if a_stale:
+                        g, g_alast = async_fl.stale_replace(g, ok_a,
+                                                            g_alast)
+                    else:
+                        g = g * ok_a.astype(jnp.float64)[:, None]
                 if fault is not None:
                     # counter-based fault draws + degradation policy,
                     # applied to the payloads *upstream* of the scheme's
@@ -768,9 +840,12 @@ class FLEngine:
                         g = g * okb.astype(jnp.float64)[:, None]
                     elif fault.on_missing == "reweight":
                         g = g * (okb.astype(jnp.float64) / q_surv)[:, None]
-                    else:       # stale: replay the last received gradient
-                        g = jnp.where(okb[:, None], g, g_stale)
-                        g_stale = g
+                    else:
+                        # stale: replay the last received gradient — the
+                        # single last-gradient code path shared with the
+                        # async buffer (core.async_fl)
+                        g, g_stale = async_fl.stale_replace(g, okb,
+                                                            g_stale)
                 if needs_dither:
                     # one (N, d) block regenerated per round — the whole
                     # dither stream never exists in memory at once
@@ -795,7 +870,13 @@ class FLEngine:
                     t_wall = jnp.where(active, t_wall + lat / lat_div,
                                        t_wall)
                 out = (w_new, t_wall, active, dkey, bkey)
-                return (out + (g_stale,) if stale else out), None
+                if amode:
+                    out = out + (a_buf,)
+                    if a_stale:
+                        out = out + (g_alast,)
+                if stale:
+                    out = out + (g_stale,)
+                return out, None
 
             def segment(carry, seg_inp):
                 w_eval, inner = carry[0], carry[1:]
@@ -809,6 +890,13 @@ class FLEngine:
 
             carry0 = (w0, w0, jnp.zeros((), jnp.float64),
                       jnp.asarray(True), dkey, bkey)
+            if amode:
+                # pre-start buffer slots are zeros: a staleness draw that
+                # reaches past round 0 delivers nothing (the device had
+                # not computed yet), matching the oracle exactly
+                carry0 = carry0 + (jnp.zeros((a_k, N, d), jnp.float64),)
+                if a_stale:
+                    carry0 = carry0 + (jnp.zeros((N, d), jnp.float64),)
             if stale:
                 # until a device's first delivery, "stale" replays zeros
                 carry0 = carry0 + (jnp.zeros((N, d), jnp.float64),)
@@ -821,7 +909,7 @@ class FLEngine:
         vmapped = jax.vmap(
             trial_fn,
             in_axes=(None, None, None, None, None, None, None,
-                     0, 0, 0, 0, 0, 0, 0, None))
+                     0, 0, 0, 0, 0, 0, 0, 0, None))
         if self.shard_trials:
             from ..compat import shard_map as shard_map_compat
             n_hw = len(jax.devices())
@@ -835,7 +923,8 @@ class FLEngine:
                 vmapped, mesh,
                 in_specs=(P(), P(), P(), P(), P(), P(), P(),
                           P("trials"), P("trials"), P("trials"), P("trials"),
-                          P("trials"), P("trials"), P("trials"), P()),
+                          P("trials"), P("trials"), P("trials"), P("trials"),
+                          P()),
                 out_specs=(P("trials"), P("trials")),
                 manual_axes=("trials",))
         runner = jax.jit(vmapped)
@@ -889,13 +978,15 @@ class FLEngine:
                           for tr in range(trials)])
         bkeys = jnp.stack([rngstream.batch_base_key(seed, tr)
                            for tr in range(trials)])
-        # fault- and participation-stream base keys ride along
+        # fault-, participation- and arrival-stream base keys ride along
         # unconditionally (cheap, and keeps trial_fn's arity mode-,
-        # fault- and participation-blind); when the matching layer is
-        # disabled the traced program never consumes them
+        # fault-, participation- and async-blind); when the matching
+        # layer is disabled the traced program never consumes them
         fkeys = jnp.stack([rngstream.fault_base_key(seed, tr)
                            for tr in range(trials)])
         pkeys = jnp.stack([rngstream.participate_base_key(seed, tr)
+                           for tr in range(trials)])
+        akeys = jnp.stack([rngstream.arrival_base_key(seed, tr)
                            for tr in range(trials)])
 
         with enable_x64():
@@ -920,7 +1011,8 @@ class FLEngine:
                 A, B_, C = seg(H), seg(Z), seg(SEL)
             ws, walls = runner(w0, eta, radius, lat_div, budget,
                                jnp.asarray(self.xs), jnp.asarray(self.ys),
-                               keys, bkeys, fkeys, pkeys, A, B_, C, Ts)
+                               keys, bkeys, fkeys, pkeys, akeys,
+                               A, B_, C, Ts)
             losses, accs = self._evaluate(ws)
             opt_err = (np.sum((np.asarray(ws) - w_star) ** 2, axis=-1)
                        if w_star is not None else None)

@@ -16,7 +16,13 @@ Matches Sec. V's protocol:
   * optional partial participation (``core.participation``): Bernoulli
     client sampling with static inclusion probabilities drawn from the
     counter-based PARTICIPATE stream (bit-shared with the JAX engine),
-    payloads scaled by the uniform inverse propensity N/S.
+    payloads scaled by the uniform inverse propensity N/S,
+  * optional buffered-async aggregation (``core.async_fl``,
+    ``mode="async"``): per-device delivery/staleness events drawn from the
+    counter-based ARRIVAL stream (bit-shared with the JAX engine) against
+    precomputed rate/CDF tables; the PS consumes staleness-discounted
+    payloads from a last-K gradient buffer, missing devices zero-fill or
+    replay their last delivered payload.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..core import async_fl
 from ..core import participation as participation_lib
 from ..core import rngstream
 from ..core.baselines import Aggregator
@@ -58,7 +65,10 @@ class FLTrainer:
                  fault: Optional[FaultSpec] = None,
                  clients_per_round: Optional[int] = None,
                  participation: str = "uniform",
-                 participation_probs=None):
+                 participation_probs=None,
+                 mode: str = "sync",
+                 async_spec: Optional[async_fl.AsyncSpec] = None,
+                 async_weights=None):
         if payload_dtype not in ("f32", "bf16"):
             raise ValueError(
                 f"payload_dtype must be 'f32' or 'bf16', got {payload_dtype!r}")
@@ -75,10 +85,26 @@ class FLTrainer:
         self.fault = fault if fault is not None and fault.enabled else None
         # same normalization for client sampling: clients_per_round=None
         # -> None (strict no-op); otherwise the shared validated config
-        # (core.participation) both backends consume bit-for-bit
+        # (core.participation) both backends consume bit-for-bit. The
+        # loss/datasize policies derive their capped-simplex weights from
+        # (task, dataset) — pure NumPy, identical bits on both backends.
+        part_weights = None
+        if (clients_per_round is not None and participation_probs is None
+                and participation in participation_lib.WEIGHTED_POLICIES):
+            part_weights = participation_lib.policy_weights(
+                participation, task, dataset)
         self.participation = participation_lib.resolve(
             clients_per_round, participation, participation_probs,
-            n_devices=deployment.n_devices, lambdas=deployment.lambdas)
+            n_devices=deployment.n_devices, lambdas=deployment.lambdas,
+            weights=part_weights)
+        # mode="sync" normalizes the async layer to None (strict no-op);
+        # otherwise the resolved tables (core.async_fl) are shared with
+        # the JAX engine bit-for-bit
+        self.async_ = async_fl.resolve(mode, async_spec,
+                                       deployment.n_devices, async_weights)
+        self._mode = mode
+        self._async_spec = async_spec
+        self._async_weights = async_weights
         self._engine = None
         # stack device data once whenever sizes allow: (N, n, feat). The
         # stacked view serves the full-batch path AND the counter-based
@@ -162,7 +188,8 @@ class FLTrainer:
                         or self._engine.batch_size != bs
                         or self._engine.payload_dtype != self.payload_dtype
                         or self._engine.fault != self.fault
-                        or self._engine.participation != self.participation):
+                        or self._engine.participation != self.participation
+                        or self._engine.async_ != self.async_):
                     part = self.participation
                     self._engine = FLEngine(
                         self.task, self.ds, self.dep, self.eta,
@@ -172,7 +199,9 @@ class FLTrainer:
                         clients_per_round=(part.clients if part else None),
                         participation=(part.policy if part else "uniform"),
                         participation_probs=(part.probs_array()
-                                             if part else None))
+                                             if part else None),
+                        mode=self._mode, async_spec=self._async_spec,
+                        async_weights=self._async_weights)
                 return self._engine.run(aggregator, rounds=rounds,
                                         trials=trials, eval_every=eval_every,
                                         seed=seed, w_star=w_star,
@@ -212,12 +241,29 @@ class FLTrainer:
         if part is not None:
             part_probs = part.probs_array()
             part_scale = float(part.scale)
+        # buffered-async layer (counter-based ARRIVAL stream, shared
+        # bit-for-bit with the JAX engine); the rate/CDF/discount tables
+        # are static float64, so the in-loop realization is exact
+        # comparisons/gathers only
+        asy = self.async_
+        if asy is not None:
+            a_rates = asy.rates_array()
+            a_cdf = asy.cdf_array()
+            a_disc = asy.discounts_array()
+            a_pscale = asy.payload_scale_array()
 
         for trial in range(trials):
             rng = np.random.default_rng((seed, trial, 17))
             fading = FadingProcess(self.dep, seed=seed * 1000 + trial)
             if fault is not None and fault.on_missing == "stale":
                 g_stale = np.zeros((self.dep.n_devices, self.task.dim))
+            if asy is not None:
+                # pre-start buffer slots are zeros: staleness draws that
+                # reach past round 0 deliver nothing
+                a_buf = np.zeros((asy.buffer_rounds, self.dep.n_devices,
+                                  self.task.dim))
+                if asy.on_missing == "stale":
+                    g_alast = np.zeros((self.dep.n_devices, self.task.dim))
             w = self.task.init_params()
             t_wall, ei = 0.0, 0
             for t in range(rounds + 1):
@@ -291,6 +337,21 @@ class FLTrainer:
                     chi = up < part_probs
                     grads = grads * (chi.astype(np.float64)
                                      * part_scale)[:, None]
+                # buffered-async delivery: the last-K buffer shifts and
+                # each device delivers a staleness-discounted payload (or
+                # nothing), upstream of the fault layer and the scheme —
+                # the same ordering as the engine scan (payload cast ->
+                # participation -> async delivery -> fault -> dither)
+                if asy is not None:
+                    ua = rngstream.arrival_block_np(
+                        seed, trial, t, self.dep.n_devices)
+                    grads, ok_a, a_buf = async_fl.async_round(
+                        grads, a_buf, ua, a_rates, a_cdf, a_disc, a_pscale)
+                    if asy.on_missing == "stale":
+                        grads, g_alast = async_fl.stale_replace(
+                            grads, ok_a, g_alast)
+                    else:
+                        grads = grads * ok_a.astype(np.float64)[:, None]
                 # graceful degradation: transform the gradients BEFORE the
                 # aggregation scheme sees them (same ordering as the engine
                 # scan: payload cast -> fault policy -> dither), so every
@@ -304,9 +365,12 @@ class FLTrainer:
                     elif fault.on_missing == "reweight":
                         grads = grads * (okb.astype(np.float64)
                                          / q_surv)[:, None]
-                    else:       # stale: replay the last received gradient
-                        grads = np.where(okb[:, None], grads, g_stale)
-                        g_stale = grads
+                    else:
+                        # stale: replay the last received gradient — the
+                        # single last-gradient code path shared with the
+                        # async buffer (core.async_fl)
+                        grads, g_stale = async_fl.stale_replace(
+                            grads, okb, g_stale)
                 # digital schemes consume counter-based dither (one (N, d)
                 # block per round, bit-replayable by the JAX engine); OTA
                 # schemes only draw AWGN from the sequential trial rng

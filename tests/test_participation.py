@@ -181,6 +181,39 @@ class TestResolve:
         with pytest.raises(ValueError, match="positive participation"):
             P.capped_proportional(np.array([1.0, 0.0, 0.0]), 2)
 
+    @pytest.mark.parametrize("policy", ["loss", "datasize"])
+    def test_weighted_policies_need_weights(self, policy):
+        with pytest.raises(ValueError, match="per-device weights"):
+            P.resolve(4, policy, n_devices=8)
+
+    def test_weighted_policy_capped_simplex(self):
+        w = np.array([3.0, 1.0, 1.0, 40.0, 2.0, 1.0, 1.0, 1.0])
+        part = P.resolve(4, "loss", n_devices=8, weights=w)
+        pi = part.probs_array()
+        assert part.policy == "loss"
+        assert abs(pi.sum() - 4.0) < 1e-9
+        assert np.all(pi <= 1.0) and np.all(pi > 0.0)
+        assert pi[3] == 1.0          # the dominant weight saturates
+        np.testing.assert_array_equal(
+            pi, P.resolve(4, "datasize", n_devices=8,
+                          weights=w).probs_array())
+
+    def test_policy_weights_derivation(self, setup):
+        """datasize weights are the shard sizes; loss weights are the
+        per-device initial losses — deterministic on both backends."""
+        task, ds, _, _ = setup
+        wd = P.policy_weights("datasize", task, ds)
+        np.testing.assert_array_equal(
+            wd, [float(len(d)) for d in ds.devices])
+        wl = P.policy_weights("loss", task, ds)
+        w0 = task.init_params()
+        np.testing.assert_array_equal(
+            wl, [float(task.global_loss(w0, d.x, d.y))
+                 for d in ds.devices])
+        assert P.policy_weights("uniform") is None
+        with pytest.raises(ValueError, match="task and dataset"):
+            P.policy_weights("loss")
+
 
 # ------------------------------------------------------ co-design solver
 
@@ -273,6 +306,15 @@ class TestEngineOracleParity:
         _assert_logs_match(_run(setup, agg, backend="numpy", trainer_kw=kw),
                            _run(setup, agg, backend="jax", trainer_kw=kw))
 
+    @pytest.mark.parametrize("policy", ["loss", "datasize"])
+    def test_weighted_policies(self, setup, policy):
+        """The trainer/engine derive the loss/datasize sampling weights
+        from their own task/dataset — identically on both backends."""
+        kw = dict(clients_per_round=CLIENTS, participation=policy)
+        agg = _vanilla(setup)
+        _assert_logs_match(_run(setup, agg, backend="numpy", trainer_kw=kw),
+                           _run(setup, agg, backend="jax", trainer_kw=kw))
+
     def test_selection_scheme(self, setup):
         """Client sampling composes with a selection-based digital scheme
         (sampling thins the pool the per-round selection draws from)."""
@@ -351,7 +393,7 @@ class TestScenarioAxes:
         from repro.api.results import SCHEMA_VERSION
         from repro.api.scenarios import sweep_participation
 
-        assert SCHEMA_VERSION == 6
+        assert SCHEMA_VERSION == 7
         base = sweep_participation(quick=True).base
         h0 = base.spec_hash()
         assert base.override("run.clients_per_round", 4).spec_hash() != h0
